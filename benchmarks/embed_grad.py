@@ -1,0 +1,55 @@
+"""Beyond-paper: PB embedding-gradient accumulation.
+
+The backward of an embedding lookup is a commutative irregular
+scatter-add over the vocab — the PB stream of DESIGN.md §3.3. Baseline:
+random-order scatter-add. PB: stable sort by id (Binning) + coalesced
+sorted scatter (Bin-Read). Also exercises the Pallas kernel pipeline
+(histogram -> positions -> row scatter -> MXU bin apply) in interpret
+mode for correctness-on-the-path (timing reported but dominated by the
+interpreter; real-TPU timing is the dry-run's domain).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, SCALE, time_fn
+from repro.core.scatter import pb_scatter_add, scatter_add_baseline
+
+
+def run() -> Rows:
+    rows = Rows()
+    if SCALE == "full":
+        T_tokens, V, d = 262144, 50304, 256
+    else:
+        T_tokens, V, d = 32768, 8192, 64
+    rng = np.random.default_rng(0)
+    # zipf-ish token distribution (hot vocab head, like real text)
+    ids = jnp.asarray(
+        np.minimum((rng.pareto(1.2, T_tokens) * 50).astype(np.int64), V - 1), jnp.int32
+    )
+    g = jnp.asarray(rng.normal(size=(T_tokens, d)).astype(np.float32))
+
+    base = jax.jit(lambda i, u: scatter_add_baseline(i, u, V))
+    pb = jax.jit(lambda i, u: pb_scatter_add(i, u, V, coalesce=False))
+    pbc = jax.jit(lambda i, u: pb_scatter_add(i, u, V, coalesce=True))
+    t_base = time_fn(base, ids, g)
+    t_pb = time_fn(pb, ids, g)
+    t_pbc = time_fn(pbc, ids, g)
+    rows.add(
+        "embed_grad/pb_sorted",
+        t_pb * 1e6,
+        f"speedup_vs_random_scatter={t_base/t_pb:.2f}x",
+    )
+    rows.add(
+        "embed_grad/pb_coalesced",
+        t_pbc * 1e6,
+        f"speedup_vs_random_scatter={t_base/t_pbc:.2f}x (PHI-style in-bin coalescing)",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run().emit():
+        print(r)

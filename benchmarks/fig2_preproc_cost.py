@@ -1,0 +1,50 @@
+"""Fig 2: pre-processing is a large share of end-to-end time.
+
+(a) EL->CSR construction share of (build + PageRank-on-CSR);
+(b) degree-sort reordering share of (reorder-rebuild + Radii).
+Paper: 48-97% for (a), 25-55% for (b).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Rows, graph_scale, time_fn
+from repro.core import (
+    build_csr_baseline,
+    degrees_from_coo,
+    graph_suite,
+    pagerank_csr_pull,
+    transpose_coo,
+)
+from repro.core.radii import radii
+from repro.core.reorder import degree_sort_rebuild
+
+
+def run() -> Rows:
+    rows = Rows()
+    suite = graph_suite(graph_scale())
+    for name, g in suite.items():
+        csc = build_csr_baseline(transpose_coo(g))
+        outdeg = degrees_from_coo(g, by="src")
+        t_build = time_fn(lambda gg: build_csr_baseline(transpose_coo(gg)), g)
+        t_pr = time_fn(lambda c, o: pagerank_csr_pull(c, o, iters=10).ranks, csc, outdeg)
+        share = t_build / (t_build + t_pr)
+        rows.add(
+            f"fig2a/build_share/{name}",
+            t_build * 1e6,
+            f"build_share={share*100:.0f}% (paper: 48-97%)",
+        )
+
+        t_reorder = time_fn(lambda gg: degree_sort_rebuild(gg, method="baseline")[0], g)
+        csr_r, _ = degree_sort_rebuild(g, method="baseline")
+        t_radii = time_fn(lambda c: radii(c, k=4, max_iters=300)[0], csr_r)
+        share_b = t_reorder / (t_reorder + t_radii)
+        rows.add(
+            f"fig2b/reorder_share/{name}",
+            t_reorder * 1e6,
+            f"reorder_share={share_b*100:.0f}% (paper: 25-55%)",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run().emit():
+        print(r)

@@ -1,0 +1,73 @@
+"""Fig 3: sensitivity of the two PB phases to bin range.
+
+Binning prefers LARGE ranges (few bins -> C-Buffers resident); Bin-Read
+prefers SMALL ranges (per-bin working set resident). Reported per range:
+measured phase seconds on this container + modeled Xeon seconds. The
+derived field flags whether each phase's preference matches the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, graph_scale, time_fn
+from repro.core import graph_suite
+from repro.core import pb as pb_core
+from repro.core.plan import HardwareModel, num_bins_for_range
+from repro.core import traffic
+
+
+def run() -> Rows:
+    rows = Rows()
+    hw = HardwareModel.cpu_xeon()
+    from benchmarks.common import PAPER_M, PAPER_N
+
+    g = graph_suite(graph_scale())["KRON"]
+    n = g.num_nodes
+    ranges = sorted({max(16, n >> k) for k in (12, 9, 6, 3, 0)})
+    # model sweep at the paper's scale (LLC-exceeding working sets)
+    paper_ranges = [max(64, PAPER_N >> k) for k in (14, 11, 8, 5, 2, 0)]
+    mod_bin, mod_read = {}, {}
+    for pr in paper_ranges:
+        mod_bin[pr] = traffic.binning_cost(
+            PAPER_M, num_bins_for_range(PAPER_N, pr), hw
+        ).seconds(hw)
+        mod_read[pr] = traffic.binread_cost(PAPER_M, pr, hw).seconds(hw)
+        rows.add(
+            f"fig3/model_range_{pr}",
+            0.0,
+            f"modeled_binning_s={mod_bin[pr]:.4f} modeled_binread_s={mod_read[pr]:.4f}",
+        )
+    for br in ranges:
+        nb = num_bins_for_range(n, br)
+
+        def binphase(dst, src):
+            return pb_core.binning_sort(dst, src, br, nb).idx
+
+        t_binning = time_fn(jax.jit(binphase), g.dst, g.src)
+        bins = jax.block_until_ready(pb_core.binning_sort(g.dst, g.src, br, nb))
+
+        def readphase(idx):
+            return jnp.zeros((n,), jnp.float32).at[idx].add(1.0)
+
+        t_read = time_fn(jax.jit(readphase), bins.idx)
+        rows.add(
+            f"fig3/measured_range_{br}",
+            (t_binning + t_read) * 1e6,
+            f"binning_s={t_binning:.4f} binread_s={t_read:.4f}",
+        )
+    # trend check (the paper's qualitative claim), at paper scale
+    bin_prefers_large = mod_bin[paper_ranges[0]] > mod_bin[paper_ranges[-1]]
+    read_prefers_small = mod_read[paper_ranges[0]] < mod_read[paper_ranges[-1]]
+    rows.add(
+        "fig3/trends",
+        0.0,
+        f"binning_prefers_large_range={bin_prefers_large} "
+        f"binread_prefers_small_range={read_prefers_small} (paper: True/True)",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run().emit():
+        print(r)

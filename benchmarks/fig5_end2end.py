@@ -1,0 +1,91 @@
+"""Fig 5: end-to-end speedups — the paper's headline result.
+
+Pipeline: start from an Edgelist, obtain PageRank.
+  A  Edgelist-direct      : PR iterations scatter into random dst order.
+  B  CSR(+build)          : build CSR/CSC once (baseline build), pull PR.
+  C  +PB                  : PB build + PB (dst-binned) PR.
+  D  +COBRA               : knob-free hierarchical build + PB PR at the
+                            Bin-Read-optimal range (COBRA execution).
+Paper means: B/A = 1.48x, C/A = 2.25x, D/A = 3.5x (Sniper, 16-core).
+We report measured CPU ratios + modeled Xeon ratios per graph.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Rows, graph_scale, time_fn
+from repro.core import (
+    build_csr_baseline,
+    build_csr_cobra,
+    build_csr_pb,
+    degrees_from_coo,
+    graph_suite,
+    pagerank_coo_scatter,
+    pagerank_csr_pull,
+    pagerank_pb,
+    transpose_coo,
+)
+from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
+from repro.core import traffic
+
+ITERS = 10
+
+
+def run() -> Rows:
+    rows = Rows()
+    hw = HardwareModel.cpu_xeon()
+    suite = graph_suite(graph_scale())
+    for name, g in suite.items():
+        n, m = g.num_nodes, g.num_edges
+        br = min(max(64, compromise_bin_range(n, hw)), n)
+        plan = CobraPlan.from_hardware(n, hw)
+
+        tA = time_fn(lambda gg: pagerank_coo_scatter(gg, iters=ITERS).ranks, g)
+        outdeg = degrees_from_coo(g, by="src")
+        tB = time_fn(
+            lambda gg, od: pagerank_csr_pull(
+                build_csr_baseline(transpose_coo(gg)), od, iters=ITERS
+            ).ranks,
+            g,
+            outdeg,
+        )
+        tC = time_fn(
+            lambda gg: (
+                build_csr_pb(transpose_coo(gg), br),
+                pagerank_pb(gg, iters=ITERS, bin_range=br).ranks,
+            )[1],
+            g,
+        )
+        tD = time_fn(
+            lambda gg: (
+                build_csr_cobra(transpose_coo(gg), plan),
+                pagerank_pb(gg, iters=ITERS, bin_range=plan.final_bin_range).ranks,
+            )[1],
+            g,
+        )
+        # modeled Xeon end-to-end at the paper's graph scale
+        from benchmarks.common import PAPER_M, PAPER_N
+
+        br_p = compromise_bin_range(PAPER_N, hw)
+        plan_p = CobraPlan.from_hardware(PAPER_N, hw)
+        mA = traffic.pr_edgelist_iter_seconds(PAPER_M, PAPER_N, hw) * ITERS
+        mB = traffic.neighpop_baseline_seconds(PAPER_M, PAPER_N, hw) + (
+            traffic.pr_pull_iter_seconds(PAPER_M, PAPER_N, hw) * ITERS
+        )
+        mC = traffic.pb_seconds(PAPER_M, PAPER_N, br_p, hw) + (
+            traffic.pr_pb_iter_seconds(PAPER_M, PAPER_N, br_p, hw) * ITERS
+        )
+        mD = traffic.cobra_seconds(PAPER_M, plan_p, hw) + (
+            traffic.pr_cobra_iter_seconds(PAPER_M, plan_p, hw) * ITERS
+        )
+        rows.add(
+            f"fig5/{name}",
+            tD * 1e6,
+            f"measured B/A={tA/tB:.2f} C/A={tA/tC:.2f} D/A={tA/tD:.2f} | "
+            f"modeled B/A={mA/mB:.2f} C/A={mA/mC:.2f} D/A={mA/mD:.2f} "
+            f"(paper means 1.48/2.25/3.5)",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run().emit():
+        print(r)

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure + beyond-paper
+integration benches. Prints ``name,us_per_call,derived`` CSV.
+
+BENCH_SCALE=small (default, CI-sized) | full (EXPERIMENTS.md numbers).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "benchmarks.table1_pb_speedup",
+    "benchmarks.table2_pb_ideal",
+    "benchmarks.fig2_preproc_cost",
+    "benchmarks.fig3_binrange",
+    "benchmarks.fig5_end2end",
+    "benchmarks.fig6_breakdown",
+    "benchmarks.moe_dispatch",
+    "benchmarks.embed_grad",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for row in mod.run().emit():
+                print(row, flush=True)
+            print(f"# {modname} done in {time.time()-t0:.0f}s", file=sys.stderr)
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{modname},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

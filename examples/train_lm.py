@@ -1,0 +1,41 @@
+"""End-to-end LM training driver: train a ~100M-param dense model for a
+few hundred steps on CPU with the full framework stack (deterministic
+data pipeline, async checkpointing + resume, straggler detection).
+
+The MoE variant (--arch qwen3-moe-235b-a22b) exercises the PB expert
+dispatch; with --mesh host:2x2 it runs the sharded (shard_map) dispatch
+path on 4 host devices (set XLA_FLAGS=--xla_force_host_platform_device_count=4).
+
+Run (about a minute):
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--mesh", default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    final_loss = train_mod.main([
+        "--arch", args.arch,
+        "--preset", "smoke",
+        "--steps", str(args.steps),
+        "--mesh", args.mesh,
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+        "--seq-len", "128",
+        "--batch", "8",
+        "--log-every", "20",
+    ])
+    print(f"final loss: {final_loss:.4f} (synthetic markov stream; "
+          "expect well below ln(V)~6.2 after a few hundred steps)")
+
+
+if __name__ == "__main__":
+    main()

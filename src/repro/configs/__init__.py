@@ -1,0 +1,4 @@
+"""Per-architecture configs (one module per assigned arch) + registry."""
+from repro.configs.registry import SHAPES, cells, get_config, list_archs
+
+__all__ = ["SHAPES", "cells", "get_config", "list_archs"]

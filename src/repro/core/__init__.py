@@ -1,0 +1,47 @@
+"""Core: the paper's contribution (Propagation Blocking + COBRA) in JAX."""
+from repro.core.cobra import cobra_scatter_add, hierarchical_binning
+from repro.core.graph import (
+    COO,
+    CSR,
+    degrees_from_coo,
+    graph_suite,
+    offsets_from_degrees,
+    transpose_coo,
+)
+from repro.core.neighbor_populate import (
+    build_csr_baseline,
+    build_csr_cobra,
+    build_csr_oracle,
+    build_csr_pb,
+)
+from repro.core.pagerank import pagerank_coo_scatter, pagerank_csr_pull, pagerank_pb
+from repro.core.pb import Bins, binning, binning_counting, binning_sort
+from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
+from repro.core.scatter import pb_scatter_add, scatter_add_baseline
+
+__all__ = [
+    "COO",
+    "CSR",
+    "Bins",
+    "CobraPlan",
+    "HardwareModel",
+    "binning",
+    "binning_counting",
+    "binning_sort",
+    "build_csr_baseline",
+    "build_csr_cobra",
+    "build_csr_oracle",
+    "build_csr_pb",
+    "cobra_scatter_add",
+    "compromise_bin_range",
+    "degrees_from_coo",
+    "graph_suite",
+    "hierarchical_binning",
+    "offsets_from_degrees",
+    "pagerank_coo_scatter",
+    "pagerank_csr_pull",
+    "pagerank_pb",
+    "pb_scatter_add",
+    "scatter_add_baseline",
+    "transpose_coo",
+]

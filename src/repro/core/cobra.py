@@ -1,0 +1,82 @@
+"""COBRA — hierarchical binning (the paper's §4, adapted to TPU).
+
+COBRA's hardware keeps a *hierarchy* of C-Buffers: L1 holds Y1 coarse
+buffers, L2 holds Y2 finer ones, LLC holds Y3 finest; a filled level-i
+buffer is unpacked by a binning engine and scattered into level-i+1
+buffers. The core only ever touches the coarse L1 set, yet memory
+receives bins at the fine range Bin-Read wants.
+
+TPU adaptation (DESIGN.md §2): the scratchpad hierarchy is explicit, so
+the same effect is achieved with **multiple radix passes**. Pass k
+refines every bin of pass k-1 by ``fanout_k``; each pass's cursor state
+(the C-Buffers) fits in VMEM because the fan-out is VMEM-bounded, and
+every pass reads/writes the tuple stream strictly sequentially. After
+the last pass the stream is grouped at the Bin-Read-optimal range.
+
+Because every pass is a *stable* partition by a refinement of the
+previous key, the composition equals one stable sort at the finest
+range — which is how correctness is tested.
+"""
+from __future__ import annotations
+
+from typing import List  # noqa: F401
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pb
+from repro.core.plan import CobraPlan
+
+
+def hierarchical_binning(
+    indices: jnp.ndarray,
+    values,
+    plan: CobraPlan,
+    method: str = "counting",
+    block: int = 2048,
+) -> pb.Bins:
+    """Run the multi-pass COBRA binning. Returns bins at the final range.
+
+    MSD-first stable radix: pass 1 groups by the coarse key; each later
+    pass re-partitions the whole stream by its finer key. Stability makes
+    "partition within parent groups" equal to "global stable partition by
+    child key" because the child key refines the parent key.
+    """
+    idx = indices
+    val = values
+    for fanout, rng in zip(plan.level_fanouts, plan.level_ranges()):
+        key = (idx // rng).astype(jnp.int32)
+        nb = -(-plan.num_indices // rng)  # ceil: number of bins at this range
+        if method == "counting" and nb <= 4096:
+            dest, counts = pb.counting_permutation(key, nb, block=block)
+            m = idx.shape[0]
+
+            def place(v):
+                out = jnp.zeros((m,) + v.shape[1:], dtype=v.dtype)
+                return out.at[dest].set(v)
+
+            idx = place(idx)
+            val = jax.tree.map(place, val)
+            last_counts = counts
+        else:
+            perm = jnp.argsort(key, stable=True)
+            idx = jnp.take(idx, perm)
+            val = jax.tree.map(lambda v: jnp.take(v, perm, axis=0), val)
+            last_counts = jnp.bincount(key, length=nb).astype(jnp.int32)
+    # Final starts are at the finest range.
+    final_nb = plan.num_bins
+    final_key = (idx // plan.final_bin_range).astype(jnp.int32)
+    counts = jnp.bincount(final_key, length=final_nb).astype(jnp.int32)
+    return pb.Bins(
+        idx=idx,
+        val=val,
+        starts=pb.starts_from_counts(counts),
+        bin_range=plan.final_bin_range,
+    )
+
+
+def cobra_scatter_add(
+    indices: jnp.ndarray, values: jnp.ndarray, out_size: int, plan: CobraPlan
+) -> jnp.ndarray:
+    bins = hierarchical_binning(indices, values, plan, method="sort")
+    return pb.bin_read_scatter_add(bins, out_size, out_dtype=values.dtype)

@@ -1,0 +1,184 @@
+"""Graph containers and synthetic generators.
+
+The paper evaluates on 5 large graphs (DBP, KRON, URND, EURO, HBUBL) that
+are diverse in degree distribution (power-law / normal / bounded-degree).
+We provide seeded synthetic analogues of each family so the benchmark
+suite reproduces the *structure* of the paper's tables without shipping
+multi-GB inputs.
+
+Representations (paper Fig. 1):
+  COO  — "Edgelist": parallel (src, dst) arrays, arbitrary edge order.
+  CSR  — offsets (n+1) + neighbor array sorted by src.
+  CSC  — CSR of the transposed graph (in-neighbors), used by pull kernels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class COO(NamedTuple):
+    """Edgelist. src/dst are int32 arrays of equal length (num_edges)."""
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    num_nodes: int
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+class CSR(NamedTuple):
+    """Compressed sparse row. offsets has length num_nodes+1."""
+
+    offsets: jnp.ndarray
+    neighs: jnp.ndarray
+    num_nodes: int
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.neighs.shape[0])
+
+
+def degrees_from_coo(coo: COO, *, by: str = "src") -> jnp.ndarray:
+    key = coo.src if by == "src" else coo.dst
+    return jnp.bincount(key, length=coo.num_nodes).astype(jnp.int32)
+
+
+def offsets_from_degrees(degrees: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive prefix sum with a trailing total: shape (n+1,)."""
+    z = jnp.zeros((1,), dtype=jnp.int32)
+    return jnp.concatenate([z, jnp.cumsum(degrees, dtype=jnp.int32)])
+
+
+def segment_ids_from_offsets(offsets: jnp.ndarray, num_edges: int) -> jnp.ndarray:
+    """Edge -> owning row, given CSR offsets. Vectorized `repeat`."""
+    return (
+        jnp.searchsorted(
+            offsets[1:], jnp.arange(num_edges, dtype=jnp.int32), side="right"
+        )
+    ).astype(jnp.int32)
+
+
+def transpose_coo(coo: COO) -> COO:
+    return COO(src=coo.dst, dst=coo.src, num_nodes=coo.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic generators (numpy on host; deterministic by seed).
+# ---------------------------------------------------------------------------
+
+
+def _to_coo(src: np.ndarray, dst: np.ndarray, n: int) -> COO:
+    return COO(
+        src=jnp.asarray(src, dtype=jnp.int32),
+        dst=jnp.asarray(dst, dtype=jnp.int32),
+        num_nodes=int(n),
+    )
+
+
+def gen_uniform(num_nodes: int, avg_degree: int, seed: int = 0) -> COO:
+    """URND analogue: uniform random endpoints (normal degree dist)."""
+    rng = np.random.default_rng(seed)
+    m = num_nodes * avg_degree
+    src = rng.integers(0, num_nodes, size=m, dtype=np.int32)
+    dst = rng.integers(0, num_nodes, size=m, dtype=np.int32)
+    return _to_coo(src, dst, num_nodes)
+
+
+def gen_kron(scale: int, avg_degree: int, seed: int = 0) -> COO:
+    """KRON analogue: RMAT/Kronecker with Graph500 parameters."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * avg_degree
+    a, b, c = 0.57, 0.19, 0.19
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for bit in range(scale):
+        r = rng.random(m)
+        # quadrant choice per RMAT
+        go_right_src = r >= a + b  # bottom half -> src bit set
+        r2 = rng.random(m)
+        p_right_dst = np.where(go_right_src, c / (c + (1 - a - b - c)), a / (a + b))
+        go_right_dst = r2 >= p_right_dst
+        src |= go_right_src.astype(np.int64) << bit
+        dst |= go_right_dst.astype(np.int64) << bit
+    perm = rng.permutation(n)  # avoid locality from bit construction
+    return _to_coo(perm[src].astype(np.int32), perm[dst].astype(np.int32), n)
+
+
+def gen_powerlaw(num_nodes: int, avg_degree: int, seed: int = 0, alpha: float = 1.8) -> COO:
+    """DBP analogue: Zipf-distributed destination popularity."""
+    rng = np.random.default_rng(seed)
+    m = num_nodes * avg_degree
+    ranks = np.arange(1, num_nodes + 1, dtype=np.float64)
+    probs = ranks ** (-alpha)
+    probs /= probs.sum()
+    perm = rng.permutation(num_nodes).astype(np.int32)
+    dst = perm[rng.choice(num_nodes, size=m, p=probs)]
+    src = rng.integers(0, num_nodes, size=m, dtype=np.int32)
+    return _to_coo(src, dst, num_nodes)
+
+
+def gen_road(side: int, seed: int = 0) -> COO:
+    """EURO analogue: 2D grid (bounded degree ~4), ids shuffled so the
+    Edgelist has no inherent locality (as a downloaded edgelist would)."""
+    rng = np.random.default_rng(seed)
+    n = side * side
+    ii, jj = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    vid = (ii * side + jj).astype(np.int64)
+    edges = []
+    right = vid[:, :-1].ravel(), vid[:, 1:].ravel()
+    down = vid[:-1, :].ravel(), vid[1:, :].ravel()
+    for s, d in (right, down):
+        edges.append((s, d))
+        edges.append((d, s))
+    src = np.concatenate([e[0] for e in edges])
+    dst = np.concatenate([e[1] for e in edges])
+    perm = rng.permutation(n)
+    order = rng.permutation(src.shape[0])  # shuffle edge order too
+    return _to_coo(perm[src][order].astype(np.int32), perm[dst][order].astype(np.int32), n)
+
+
+def gen_bubbles(side: int, seed: int = 0) -> COO:
+    """HBUBL analogue: triangulated mesh (degree ~3) — grid + one diagonal."""
+    rng = np.random.default_rng(seed)
+    n = side * side
+    ii, jj = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    vid = (ii * side + jj).astype(np.int64)
+    pairs = [
+        (vid[:, :-1].ravel(), vid[:, 1:].ravel()),
+        (vid[:-1, :].ravel(), vid[1:, :].ravel()),
+        (vid[:-1, :-1].ravel(), vid[1:, 1:].ravel()),
+    ]
+    src = np.concatenate([p[0] for p in pairs] + [p[1] for p in pairs])
+    dst = np.concatenate([p[1] for p in pairs] + [p[0] for p in pairs])
+    perm = rng.permutation(n)
+    order = rng.permutation(src.shape[0])
+    return _to_coo(perm[src][order].astype(np.int32), perm[dst][order].astype(np.int32), n)
+
+
+def graph_suite(scale: str = "bench") -> dict:
+    """The 5-graph suite mirroring the paper's inputs.
+
+    scale='bench' sizes target a single-core CPU container (~1-4M edges);
+    scale='smoke' is for tests (~10-50k edges).
+    """
+    if scale == "bench":
+        return {
+            "DBP": gen_powerlaw(1 << 18, 8, seed=1),
+            "KRON": gen_kron(18, 8, seed=2),
+            "URND": gen_uniform(1 << 18, 8, seed=3),
+            "EURO": gen_road(512, seed=4),
+            "HBUBL": gen_bubbles(512, seed=5),
+        }
+    return {
+        "DBP": gen_powerlaw(1 << 10, 4, seed=1),
+        "KRON": gen_kron(10, 4, seed=2),
+        "URND": gen_uniform(1 << 10, 4, seed=3),
+        "EURO": gen_road(32, seed=4),
+        "HBUBL": gen_bubbles(32, seed=5),
+    }

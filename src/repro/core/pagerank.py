@@ -1,0 +1,136 @@
+"""PageRank — the paper's representative processing kernel.
+
+Variants exercised by the benchmarks:
+
+  * ``pagerank_coo_scatter``  — "processing the Edgelist directly"
+    (paper Fig. 5 baseline): every iteration scatter-adds contributions
+    at random destination order. Irregular, DRAM-latency bound.
+  * ``pagerank_csr_pull``     — standard CSC/pull execution over a built
+    CSR: per-vertex gather + segment sum (sequential neighbor arrays).
+  * ``pagerank_pb``           — PB push execution: destinations are
+    binned ONCE (pre-processing), then every iteration's scatter walks
+    bin-sorted (near-sequential) destinations. This is where PB's
+    per-iteration locality win comes from, and why PageRank amortizes
+    Binning across iterations (paper Table 1 shows smaller but real
+    gains vs. NeighPop's one-shot 6-7x).
+
+PageRank updates are commutative, so bins may be read in any order and
+in-bin coalescing (PHI-style) is legal; ``coalesce=True`` pre-reduces
+duplicate destinations within the binned stream.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pb
+from repro.core.graph import COO, CSR, degrees_from_coo, segment_ids_from_offsets
+
+
+class PRResult(NamedTuple):
+    ranks: jnp.ndarray
+    iters: int
+
+
+DAMP = 0.85
+
+
+def _out_degrees(coo: COO) -> jnp.ndarray:
+    return degrees_from_coo(coo, by="src")
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "iters"))
+def _pr_coo(src, dst, num_nodes, iters):
+    n = num_nodes
+    outdeg = jnp.maximum(jnp.bincount(src, length=n), 1).astype(jnp.float32)
+    ranks = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+    def body(_, ranks):
+        contrib = ranks / outdeg
+        # random-destination scatter: the Edgelist-direct execution
+        incoming = jnp.zeros((n,), jnp.float32).at[dst].add(jnp.take(contrib, src))
+        return (1.0 - DAMP) / n + DAMP * incoming
+
+    return jax.lax.fori_loop(0, iters, body, ranks)
+
+
+def pagerank_coo_scatter(coo: COO, iters: int = 10) -> PRResult:
+    return PRResult(_pr_coo(coo.src, coo.dst, coo.num_nodes, iters), iters)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "iters", "num_edges"))
+def _pr_pull(offsets_t, neighs_t, outdeg, num_nodes, num_edges, iters):
+    """Pull over the transpose CSR (a CSC): for each v, sum contributions
+    of in-neighbors, which are contiguous in memory."""
+    n = num_nodes
+    seg = segment_ids_from_offsets(offsets_t, num_edges)  # edge -> dst vertex
+    ranks = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+    def body(_, ranks):
+        contrib = ranks / outdeg
+        gathered = jnp.take(contrib, neighs_t)  # in-neighbor contributions
+        incoming = jax.ops.segment_sum(
+            gathered, seg, num_segments=n, indices_are_sorted=True
+        )
+        return (1.0 - DAMP) / n + DAMP * incoming
+
+    return jax.lax.fori_loop(0, iters, body, ranks)
+
+
+def pagerank_csr_pull(csc: CSR, outdeg: jnp.ndarray, iters: int = 10) -> PRResult:
+    r = _pr_pull(
+        csc.offsets,
+        csc.neighs,
+        jnp.maximum(outdeg, 1).astype(jnp.float32),
+        csc.num_nodes,
+        csc.num_edges,
+        iters,
+    )
+    return PRResult(r, iters)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "iters", "bin_range", "coalesce")
+)
+def _pr_pb(src_b, dst_b, num_nodes, iters, bin_range, coalesce):
+    """PB push: (src,dst) stream pre-binned by dst//bin_range. Per
+    iteration, contributions scatter into bin-sorted destinations."""
+    n = num_nodes
+    outdeg = jnp.maximum(jnp.bincount(src_b, length=n), 1).astype(jnp.float32)
+    ranks = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+    def body(_, ranks):
+        contrib = ranks / outdeg
+        vals = jnp.take(contrib, src_b)
+        incoming = jnp.zeros((n,), jnp.float32).at[dst_b].add(vals)
+        return (1.0 - DAMP) / n + DAMP * incoming
+
+    return jax.lax.fori_loop(0, iters, body, ranks)
+
+
+def pb_bin_edges(coo: COO, bin_range: int):
+    """The PB pre-processing step for push PageRank: bin edges by
+    destination range once; iterations then scatter in near-sequential
+    order. Returns (src_binned, dst_binned)."""
+    num_bins = -(-coo.num_nodes // bin_range)
+    bins = pb.binning_sort(coo.dst, coo.src, bin_range, num_bins)
+    return bins.val, bins.idx
+
+
+def pagerank_pb_prebinned(
+    src_b, dst_b, num_nodes: int, iters: int = 10, bin_range: int = 1 << 14
+) -> PRResult:
+    """Processing phase only (binning amortized — paper Table 1's setup)."""
+    r = _pr_pb(src_b, dst_b, num_nodes, iters, bin_range, False)
+    return PRResult(r, iters)
+
+
+def pagerank_pb(
+    coo: COO, iters: int = 10, bin_range: int = 1 << 14, coalesce: bool = False
+) -> PRResult:
+    src_b, dst_b = pb_bin_edges(coo, bin_range)
+    r = _pr_pb(src_b, dst_b, coo.num_nodes, iters, bin_range, coalesce)
+    return PRResult(r, iters)

@@ -1,0 +1,192 @@
+"""Propagation Blocking (PB) primitives — the paper's Algorithm 2, TPU-idiomatic.
+
+PB splits an irregular update stream into:
+
+  Binning  — route each (index, value) tuple into the bin owning
+             ``index // bin_range``, coalescing writes so all memory
+             traffic is sequential.
+  Bin-Read — process bins one at a time; each bin's touched index range
+             fits in fast memory.
+
+On a multicore, Binning appends to bins through per-bin cursors; the TPU
+equivalent is a **stable counting sort by bin id** (histogram → exclusive
+prefix → rank-and-permute). Stability is what preserves correctness for
+non-commutative kernels (paper §2): tuples within a bin keep stream order.
+
+Two implementations are provided:
+
+  * ``binning_sort``     — semantic reference built on XLA's stable sort.
+  * ``binning_counting`` — the PB-structured blockwise implementation: a
+    ``lax.scan`` over fixed-size blocks, each block maintaining per-bin
+    cursors ("C-Buffer" state) in registers/VMEM. This is the algorithm
+    the Pallas kernel (kernels/binning) implements on real TPUs, and the
+    building block of the hierarchical COBRA execution (core/cobra.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Bins(NamedTuple):
+    """A binned tuple stream.
+
+    idx/val are the stream reordered so bin 0's tuples come first (stable
+    within each bin). ``starts`` has length num_bins+1 (exclusive prefix
+    of per-bin counts).
+    """
+
+    idx: jnp.ndarray
+    val: jnp.ndarray
+    starts: jnp.ndarray
+    bin_range: int
+
+    @property
+    def num_bins(self) -> int:
+        return int(self.starts.shape[0]) - 1
+
+
+def bin_ids(indices: jnp.ndarray, bin_range: int) -> jnp.ndarray:
+    return (indices // bin_range).astype(jnp.int32)
+
+
+def starts_from_counts(counts: jnp.ndarray) -> jnp.ndarray:
+    z = jnp.zeros((1,), dtype=jnp.int32)
+    return jnp.concatenate([z, jnp.cumsum(counts, dtype=jnp.int32)])
+
+
+# ---------------------------------------------------------------------------
+# Reference binning: XLA stable sort by bin id.
+# ---------------------------------------------------------------------------
+
+
+def binning_sort(
+    indices: jnp.ndarray, values: jnp.ndarray, bin_range: int, num_bins: int
+) -> Bins:
+    bids = bin_ids(indices, bin_range)
+    perm = jnp.argsort(bids, stable=True)
+    counts = jnp.bincount(bids, length=num_bins).astype(jnp.int32)
+    return Bins(
+        idx=jnp.take(indices, perm),
+        val=jax.tree.map(lambda v: jnp.take(v, perm, axis=0), values),
+        starts=starts_from_counts(counts),
+        bin_range=bin_range,
+    )
+
+
+# ---------------------------------------------------------------------------
+# PB-structured binning: blockwise counting sort with per-bin cursors.
+# ---------------------------------------------------------------------------
+
+
+def _pad_stream(x: jnp.ndarray, block: int, fill) -> jnp.ndarray:
+    m = x.shape[0]
+    pad = (-m) % block
+    if pad == 0:
+        return x
+    pad_width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad_width, constant_values=fill)
+
+
+def counting_permutation(
+    bids: jnp.ndarray, num_bins: int, block: int = 2048
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Destination position of every element under a stable counting sort
+    by ``bids``; also returns per-bin counts.
+
+    Structure mirrors PB's Binning phase: a scan over blocks, carrying a
+    per-bin write cursor. Within a block, one-hot ranks are computed with
+    dense ops (MXU-friendly on TPU; the Pallas kernel keeps the one-hot
+    tile in VMEM).
+    """
+    m = bids.shape[0]
+    counts = jnp.bincount(bids, length=num_bins).astype(jnp.int32)
+    cursors0 = starts_from_counts(counts)[:-1]  # (B,) write cursor per bin
+
+    bids_p = _pad_stream(bids, block, num_bins)  # padding routed to bin B
+    nblocks = bids_p.shape[0] // block
+    blocks = bids_p.reshape(nblocks, block)
+
+    def step(cursors, kb):
+        oh = (kb[:, None] == jnp.arange(num_bins, dtype=kb.dtype)[None, :]).astype(
+            jnp.int32
+        )  # (block, B)
+        in_block_rank = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=1) - 1  # (block,)
+        base = jnp.where(kb < num_bins, cursors[jnp.minimum(kb, num_bins - 1)], m)
+        pos = base + in_block_rank
+        return cursors + jnp.sum(oh, axis=0), pos
+
+    _, pos_blocks = jax.lax.scan(step, cursors0, blocks)
+    dest = pos_blocks.reshape(-1)[:m]
+    return dest, counts
+
+
+def binning_counting(
+    indices: jnp.ndarray,
+    values,
+    bin_range: int,
+    num_bins: int,
+    block: int = 2048,
+) -> Bins:
+    bids = bin_ids(indices, bin_range)
+    dest, counts = counting_permutation(bids, num_bins, block=block)
+    m = indices.shape[0]
+
+    def place(v):
+        out = jnp.zeros((m,) + v.shape[1:], dtype=v.dtype)
+        return out.at[dest].set(v)
+
+    return Bins(
+        idx=place(indices),
+        val=jax.tree.map(place, values),
+        starts=starts_from_counts(counts),
+        bin_range=bin_range,
+    )
+
+
+def binning(
+    indices: jnp.ndarray,
+    values,
+    bin_range: int,
+    num_bins: int,
+    method: str = "sort",
+    block: int = 2048,
+) -> Bins:
+    if method == "sort":
+        return binning_sort(indices, values, bin_range, num_bins)
+    if method == "counting":
+        return binning_counting(indices, values, bin_range, num_bins, block=block)
+    raise ValueError(f"unknown binning method: {method}")
+
+
+# ---------------------------------------------------------------------------
+# Bin-Read helpers.
+# ---------------------------------------------------------------------------
+
+
+def segment_ids_from_starts(starts: jnp.ndarray, stream_len: int) -> jnp.ndarray:
+    return jnp.searchsorted(
+        starts[1:], jnp.arange(stream_len, dtype=jnp.int32), side="right"
+    ).astype(jnp.int32)
+
+
+def bin_read_scatter_add(
+    bins: Bins, out_size: int, out_dtype=jnp.float32
+) -> jnp.ndarray:
+    """Commutative Bin-Read: accumulate binned values into a dense output.
+
+    Because the stream is sorted by bin (and bins are contiguous index
+    ranges), the scatter walks the output nearly sequentially — the
+    locality PB buys. ``indices_are_sorted`` hands XLA the same fact.
+    """
+    out = jnp.zeros((out_size,) + bins.val.shape[1:], dtype=out_dtype)
+    return out.at[bins.idx].add(bins.val.astype(out_dtype), indices_are_sorted=False)
+
+
+@functools.partial(jax.jit, static_argnames=("out_size", "num_bins", "bin_range"))
+def full_pb_scatter_add(indices, values, out_size, *, bin_range, num_bins):
+    b = binning_sort(indices, values, bin_range, num_bins)
+    return bin_read_scatter_add(b, out_size, out_dtype=values.dtype)

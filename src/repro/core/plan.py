@@ -1,0 +1,154 @@
+"""Bin-range planning.
+
+The paper's §3 shows software PB must *compromise* on a single bin-range
+knob; COBRA's §4 removes the knob by deriving a per-cache-level bin range
+from architectural capacities. We reproduce both:
+
+  * ``compromise_bin_range``  — the single-knob software-PB choice.
+  * ``CobraPlan.from_hardware`` — the knob-free hierarchical plan, driven
+    by an explicit hardware model (TPU: VMEM is the only fast level, so
+    the hierarchy is realized as multiple VMEM-bounded radix *passes*;
+    at pod scale an outermost ICI level is added by the distributed
+    dispatch path).
+
+All sizes in bytes. Int32 tuple elements assumed (paper uses 32-bit ids).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Capacities that bound C-Buffer fan-out per level.
+
+    The CPU default mirrors the paper's Xeon (32K L1 / 35M LLC); the TPU
+    default models a v5e core. ``cbuffer_bytes`` is the unit of coalesced
+    transfer: a cacheline on CPU, a (8,128)-lane int32 tile on TPU.
+    """
+
+    name: str
+    fast_levels: Sequence[int]  # capacity of each fast level, small -> large
+    cbuffer_bytes: int
+    dram_bandwidth: float  # bytes/s, for the traffic->time model
+    fast_bandwidth: float  # bytes/s of the innermost level
+
+    @staticmethod
+    def cpu_xeon() -> "HardwareModel":
+        return HardwareModel(
+            name="xeon-14c",
+            fast_levels=(32 * 1024, 1024 * 1024, 35 * 1024 * 1024),
+            cbuffer_bytes=64,
+            dram_bandwidth=60e9,
+            fast_bandwidth=1000e9,
+        )
+
+    @staticmethod
+    def tpu_v5e() -> "HardwareModel":
+        # One fast level (VMEM ~128MiB shared by scratch; budget half for
+        # C-Buffers) but multiple *passes* give the hierarchy.
+        return HardwareModel(
+            name="tpu-v5e",
+            fast_levels=(64 * 1024 * 1024,),
+            cbuffer_bytes=8 * 128 * 4,  # one int32 VREG tile
+            dram_bandwidth=819e9,
+            fast_bandwidth=20e12,  # VMEM
+        )
+
+
+TUPLE_BYTES = 8  # (index, value) int32 pairs, as in the paper
+
+
+def num_bins_for_range(num_indices: int, bin_range: int) -> int:
+    return max(1, math.ceil(num_indices / bin_range))
+
+
+def binread_optimal_range(hw: HardwareModel, value_bytes_per_index: int = 8) -> int:
+    """Bin-Read wants each bin's touched index range resident in the
+    innermost fast level (paper Fig. 3 right).  value_bytes_per_index
+    counts the arrays indexed during apply (offsets+neighs ~ 8B)."""
+    return max(1, hw.fast_levels[0] // (2 * value_bytes_per_index))
+
+
+def binning_optimal_num_bins(hw: HardwareModel) -> int:
+    """Binning wants all C-Buffers resident in the innermost fast level
+    (paper Fig. 3 left)."""
+    return max(2, hw.fast_levels[0] // (2 * hw.cbuffer_bytes))
+
+
+def compromise_bin_range(num_indices: int, hw: HardwareModel) -> int:
+    """The single-knob software-PB compromise: geometric mean of the two
+    phases' optima, clamped. This reproduces the paper's observation that
+    neither phase runs at its best point."""
+    r_read = binread_optimal_range(hw)
+    r_bin = max(1, math.ceil(num_indices / binning_optimal_num_bins(hw)))
+    return int(max(1, math.sqrt(r_read * r_bin)))
+
+
+@dataclass(frozen=True)
+class CobraPlan:
+    """A knob-free hierarchical binning plan.
+
+    ``level_fanouts[k]`` is the number of child bins each level-k bin is
+    split into on pass k (COBRA: Y_1 coarse ... Y_L fine). The product of
+    fan-outs equals the final number of bins; the final bin range is the
+    Bin-Read-optimal range, so Bin-Read runs at its best point while each
+    Binning pass runs with a fan-out whose C-Buffers fit the fast level —
+    Binning's best point. That is exactly the paper's Fig. 4 claim.
+
+    Hashable (fan-outs stored as a tuple) so jitted builders can cache on
+    the plan.
+    """
+
+    num_indices: int
+    final_bin_range: int
+    level_fanouts: Tuple[int, ...] = ()
+
+    @property
+    def num_bins(self) -> int:
+        return num_bins_for_range(self.num_indices, self.final_bin_range)
+
+    @property
+    def num_passes(self) -> int:
+        return len(self.level_fanouts)
+
+    def level_ranges(self) -> List[int]:
+        """Bin range after each pass (coarse -> fine). Ranges are nested
+        multiples of the final range (paper's 16R / 8R / R): pass k's
+        range = final_range x prod(fanouts after k), so every coarse bin
+        is a whole number of fine bins — the property that makes the
+        stable multi-pass composition equal a single stable fine sort."""
+        ranges = []
+        for k in range(len(self.level_fanouts)):
+            mult = 1
+            for y in self.level_fanouts[k + 1 :]:
+                mult *= y
+            ranges.append(self.final_bin_range * mult)
+        return ranges
+
+    @staticmethod
+    def from_hardware(
+        num_indices: int,
+        hw: HardwareModel | None = None,
+        value_bytes_per_index: int = 8,
+        max_fanout: int | None = None,
+    ) -> "CobraPlan":
+        hw = hw or HardwareModel.tpu_v5e()
+        final_range = min(binread_optimal_range(hw, value_bytes_per_index), num_indices)
+        total_bins = num_bins_for_range(num_indices, final_range)
+        per_pass = max_fanout or binning_optimal_num_bins(hw)
+        fanouts: List[int] = []
+        remaining = total_bins
+        while remaining > 1:
+            y = min(per_pass, remaining)
+            fanouts.append(y)
+            remaining = math.ceil(remaining / y)
+        if not fanouts:
+            fanouts = [1]
+        return CobraPlan(
+            num_indices=num_indices,
+            final_bin_range=final_range,
+            level_fanouts=tuple(fanouts),
+        )

@@ -1,0 +1,60 @@
+"""PB-backed scatter primitives shared by the LM-framework integrations.
+
+The backward pass of an embedding lookup and the combine step of MoE
+routing are irregular scatter-adds — the exact update stream PB targets.
+``pb_segment_scatter_add`` is the workhorse: bin indices (counting sort),
+coalesce duplicates within the sorted stream (legal: adds commute — the
+PHI-style optimization the paper cites), then apply bin-by-bin with
+near-sequential writes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("out_size",))
+def scatter_add_baseline(indices, updates, out_size: int):
+    """Direct random scatter-add (the no-PB baseline)."""
+    out = jnp.zeros((out_size,) + updates.shape[1:], dtype=updates.dtype)
+    return out.at[indices].add(updates)
+
+
+@functools.partial(jax.jit, static_argnames=("out_size", "coalesce"))
+def pb_scatter_add(indices, updates, out_size: int, coalesce: bool = True):
+    """PB scatter-add: sort-by-index (Binning at range=1 granularity via a
+    single stable sort — the functional equivalent of hierarchical
+    binning; the Pallas path performs it in VMEM-bounded passes), then a
+    sorted scatter (Bin-Read locality), optionally pre-coalescing runs of
+    equal indices with a segmented prefix trick.
+    """
+    order = jnp.argsort(indices, stable=True)
+    idx_s = jnp.take(indices, order)
+    upd_s = jnp.take(updates, order, axis=0)
+    if coalesce:
+        # Segmented sum of equal-index runs without dynamic shapes:
+        # inclusive cumsum, then keep only the last element of each run
+        # (difference against the previous run's total).
+        csum = jnp.cumsum(upd_s.astype(jnp.float32), axis=0)
+        is_last = jnp.concatenate([idx_s[1:] != idx_s[:-1], jnp.array([True])])
+        # total of run ending at i = csum[i] - csum[last index before run]
+        run_prev = jnp.where(
+            jnp.concatenate([jnp.array([True]), idx_s[1:] != idx_s[:-1]]),
+            jnp.arange(idx_s.shape[0]),
+            0,
+        )
+        run_start = jax.lax.associative_scan(jnp.maximum, run_prev)
+        prev_total = jnp.where(
+            (run_start > 0)[(...,) + (None,) * (upd_s.ndim - 1)],
+            jnp.take(csum, jnp.maximum(run_start - 1, 0), axis=0),
+            0.0,
+        )
+        run_sum = csum - prev_total
+        contrib = jnp.where(is_last[(...,) + (None,) * (upd_s.ndim - 1)], run_sum, 0.0)
+        out = jnp.zeros((out_size,) + updates.shape[1:], dtype=jnp.float32)
+        out = out.at[idx_s].add(contrib, indices_are_sorted=True)
+        return out.astype(updates.dtype)
+    out = jnp.zeros((out_size,) + updates.shape[1:], dtype=updates.dtype)
+    return out.at[idx_s].add(upd_s, indices_are_sorted=True)

@@ -1,0 +1,64 @@
+"""Error-feedback int8 gradient compression for the data-parallel
+all-reduce.
+
+At 1000+ nodes the DP all-reduce of f32 gradients is the dominant
+cross-pod (DCI) traffic. Quantizing to int8 with a per-tensor scale cuts
+it 4x; the quantization residual is carried in an error-feedback buffer
+so the compression bias vanishes over steps (Karimireddy et al., 2019).
+
+Implemented as a shard_map over the data axes: quantize locally ->
+psum int32 -> dequantize, residual = g - dequant(quant(g)). Composes
+with the optimizer unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_tree(grads, residuals, mesh, axes=("data",)):
+    """All-reduce `grads` over `axes` with int8 error-feedback compression.
+    Returns (reduced_grads, new_residuals). grads are expected already
+    sharded/replicated per the training setup; this operates leaf-wise."""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def one(g, r):
+        spec = P()  # replicated leaves inside the DP group
+
+        def f(gl, rl):
+            gq = gl.astype(jnp.float32) + rl
+            q, scale = _quantize(gq)
+            summed = jax.lax.psum(q.astype(jnp.int32), axes)
+            scale_sum = jax.lax.psum(scale, axes)  # scales averaged below
+            mean_scale = scale_sum / n
+            out = summed.astype(jnp.float32) * mean_scale / n
+            new_r = gq - q.astype(jnp.float32) * scale
+            return out, new_r
+
+        return shard_map(
+            f, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec), check_vma=False
+        )(g, r)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        jax.tree.unflatten(treedef, [o[1] for o in outs]),
+    )
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

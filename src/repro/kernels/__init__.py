@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for PB/COBRA hot spots (interpret-mode validated)."""
+from repro.kernels import ops, ref
+from repro.kernels.binning import cobra_binning_pass_pallas, counting_positions_pallas
+from repro.kernels.binread import binread_scatter_add_pallas
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.scatter_rows import scatter_rows_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "histogram_pallas",
+    "counting_positions_pallas",
+    "cobra_binning_pass_pallas",
+    "binread_scatter_add_pallas",
+    "scatter_rows_pallas",
+]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def histogram_ref(keys: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    """Counts of keys in [0, num_bins); out-of-range keys ignored."""
+    clipped = jnp.where(keys < num_bins, keys, num_bins)
+    return jnp.bincount(clipped, length=num_bins + 1)[:num_bins].astype(jnp.int32)
+
+
+def counting_positions_ref(
+    keys: jnp.ndarray, starts: jnp.ndarray, num_bins: int
+) -> jnp.ndarray:
+    """dest[i] = starts[keys[i]] + #{j < i : keys[j] == keys[i]}."""
+    m = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    keys_sorted = jnp.take(keys, order)
+    counts = jnp.bincount(keys, length=num_bins).astype(jnp.int32)
+    tight = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)])[:-1]
+    rank_sorted = jnp.arange(m, dtype=jnp.int32) - jnp.take(tight, keys_sorted)
+    dest_sorted = jnp.take(starts, keys_sorted) + rank_sorted
+    return jnp.zeros((m,), jnp.int32).at[order].set(dest_sorted)
+
+
+def binned_stream_ref(keys, idx, val, num_bins):
+    """Stable sort by key: the semantic result of any binning pass."""
+    del num_bins
+    perm = jnp.argsort(keys, stable=True)
+    return jnp.take(idx, perm), jnp.take(val, perm)
+
+
+def binread_scatter_add_ref(idx_padded, val_padded, bin_range):
+    B, L = idx_padded.shape
+    d = val_padded.shape[-1]
+    flat_idx = idx_padded.reshape(-1)
+    flat_val = val_padded.reshape(-1, d)
+    out = jnp.zeros((B * bin_range, d), val_padded.dtype)
+    oob = B * bin_range  # padding (-1) routed out of bounds and dropped
+    safe = jnp.where(flat_idx >= 0, flat_idx, oob)
+    return out.at[safe].add(flat_val, mode="drop")
+
+
+def scatter_rows_ref(x, pos, out_rows):
+    out = jnp.zeros((out_rows, x.shape[1]), x.dtype)
+    safe = jnp.where(pos >= 0, pos, out_rows)  # dropped via OOB
+    return out.at[safe].set(x, mode="drop")

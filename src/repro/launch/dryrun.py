@@ -1,0 +1,409 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * full-depth compile (scan-over-layers) -> memory_analysis proves fit,
+    and the compile itself proves the sharding/collective program is
+    coherent at 256 (single-pod) and 512 (multi-pod) chips;
+  * two UNROLLED probe compiles at small layer counts -> linear
+    extrapolation of FLOPs / bytes / collective-bytes to the full depth
+    (XLA counts loop bodies once; see repro/roofline.py);
+  * the three roofline terms + bottleneck + useful-compute ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, ShapeSpec, cells, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import params as pp
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, flops_per_token
+from repro.roofline import CellCost, Roofline, collective_bytes_from_hlo, extrapolate
+from repro.train import steps as steps_mod
+from repro.train.optimizer import OptConfig, OptState
+from repro.train.steps import default_opt_config
+
+
+# ---------------------------------------------------------------------------
+# abstract (no-allocation) input construction
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh, axes):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.dtype(dtype), sharding=shd.sharding_for_axes(mesh, shape, axes)
+    )
+
+
+def abstract_params(cfg: ModelConfig, mesh):
+    with pp.abstract_init():
+        boxed = T.init_params(jax.random.PRNGKey(0), cfg)
+    values, axes = pp.unbox(boxed)
+    return jax.tree.map(
+        lambda v, a: _sds(v.shape, v.dtype, mesh, a), values, axes
+    ), axes
+
+
+def abstract_opt_state(params_sds, axes, oc: OptConfig, mesh) -> OptState:
+    mdt = jnp.dtype(oc.moment_dtype)
+
+    def like(p, a):
+        return _sds(p.shape, mdt, mesh, a)
+
+    step = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    if oc.kind == "adamw":
+        m = jax.tree.map(like, params_sds, axes)
+        v = jax.tree.map(like, params_sds, axes)
+        return OptState(step, m, v)
+    from repro.train.optimizer import _factored_shape
+
+    def make_v(p, a):
+        fs = _factored_shape(p.shape)
+        if fs is None:
+            return _sds(p.shape, mdt, mesh, a)
+        return (
+            _sds(fs[0], mdt, mesh, a[:-1]),
+            _sds(fs[1], mdt, mesh, a[:-2] + a[-1:]),
+        )
+
+    v = jax.tree.map(make_v, params_sds, axes)
+    return OptState(step, None, v)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    out = {}
+    for name, s in steps_mod.batch_struct(cfg, shape).items():
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[name] = _sds(s.shape, s.dtype, mesh, axes)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec, mesh) -> T.StepState:
+    with pp.abstract_init():
+        st = T.init_cache(cfg, shape.global_batch, shape.seq_len)
+    caches, axes = pp.unbox(st.caches)
+    caches = jax.tree.map(lambda v, a: _sds(v.shape, v.dtype, mesh, a), caches, axes)
+    index = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return T.StepState(caches=caches, index=index)
+
+
+# ---------------------------------------------------------------------------
+# lowering per shape kind
+# ---------------------------------------------------------------------------
+
+
+def device_bytes(tree) -> int:
+    """Exact per-device bytes of a ShapeDtypeStruct tree with shardings."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shard_shape = leaf.sharding.shard_shape(leaf.shape)
+        n = 1
+        for s in shard_shape:
+            n *= s
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, accum_steps: int = 1):
+    """Returns jax.stages.Lowered for the cell's step function."""
+    with shd.use_mesh(mesh, rules=shd.rules_for_profile(cfg.sharding_profile)):
+        if shape.kind == "train":
+            oc = default_opt_config(cfg)
+            params_sds, axes = abstract_params(cfg, mesh)
+            opt_sds = abstract_opt_state(params_sds, axes, oc, mesh)
+            batch_sds = abstract_batch(cfg, shape, mesh)
+            step = steps_mod.make_train_step(cfg, oc, accum_steps=accum_steps)
+            return jax.jit(step, donate_argnums=(0,)).lower(
+                steps_mod.TrainState(params_sds, opt_sds), batch_sds
+            )
+        if shape.kind == "prefill":
+            params_sds, _ = abstract_params(cfg, mesh)
+            batch_sds = abstract_batch(cfg, shape, mesh)
+            step = steps_mod.make_prefill_step(cfg, max_len=shape.seq_len)
+            return jax.jit(step).lower(params_sds, batch_sds)
+        if shape.kind == "decode":
+            params_sds, _ = abstract_params(cfg, mesh)
+            state_sds = abstract_cache(cfg, shape, mesh)
+            tokens = _sds((shape.global_batch, 1), jnp.int32, mesh, ("batch", None))
+            step = steps_mod.make_decode_step(cfg)
+            return jax.jit(step, donate_argnums=(1,)).lower(params_sds, state_sds, tokens)
+        raise ValueError(shape.kind)
+
+
+def probe_layers(cfg: ModelConfig):
+    """(L_a, L_b) unrolled probe depths respecting family periodicity."""
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every, 2 * cfg.cross_attn_every
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every
+    if cfg.family == "ssm":
+        return 2, 4
+    return 2, 4
+
+
+def probe_cfg(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    """Probe variant for cost extrapolation: unrolled layers, direct
+    attention, single-chunk loss — every scan whose body XLA would count
+    once is flattened so per-step FLOPs/bytes/collectives are exact.
+    (Probes are compile-only; their memory footprint is irrelevant.)
+
+    Probes compile in pure f32: the CPU backend has no native bf16 dot,
+    so a bf16 module's cost analysis counts f32-converted operands PLUS
+    conversion traffic (~5x true TPU bytes — measured in EXPERIMENTS.md
+    §Perf pair 1 iteration 0). An all-f32 module has no conversion ops;
+    halving its bytes/collective-bytes gives the bf16-native estimate.
+    """
+    return dataclasses.replace(
+        cfg,
+        num_layers=n_layers,
+        scan_layers=False,
+        use_blockwise_attn=False,
+        loss_chunk=1 << 30,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )
+
+
+def compile_cost(cfg: ModelConfig, shape: ShapeSpec, mesh, accum_steps: int = 1) -> CellCost:
+    lowered = lower_cell(cfg, shape, mesh, accum_steps=accum_steps)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return CellCost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        collective=coll,
+        num_layers=cfg.num_layers,
+    )
+
+
+def analyze_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    skip_probes: bool = False,
+    overrides: Optional[Dict[str, Any]] = None,
+):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "ok": False,
+    }
+    t0 = time.time()
+    # exact per-device state bytes (params + opt + cache) from shardings
+    with shd.use_mesh(mesh, rules=shd.rules_for_profile(cfg.sharding_profile)):
+        params_sds, axes = abstract_params(cfg, mesh)
+        state_b = device_bytes(params_sds)
+        if shape.kind == "train":
+            oc = default_opt_config(cfg)
+            opt_sds = abstract_opt_state(params_sds, axes, oc, mesh)
+            state_b += device_bytes(opt_sds.v)
+            if opt_sds.m is not None:
+                state_b += device_bytes(opt_sds.m)
+        if shape.kind == "decode":
+            state_b += device_bytes(abstract_cache(cfg, shape, mesh).caches)
+    rec["state_bytes_per_device"] = int(state_b)
+
+    # 1) full-depth compile (memory + validity). For train shapes, search
+    # the smallest grad-accumulation factor that fits HBM (the production
+    # auto-fit: numerics are invariant, working set shrinks by 1/accum).
+    # Microbatches must stay divisible by the batch mesh axes (shard_map).
+    batch_ways = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            batch_ways *= mesh.shape[a]
+    accum_opts = [
+        a
+        for a in ([1, 2, 4, 8, 16] if shape.kind == "train" else [1])
+        if shape.global_batch % (a * batch_ways) == 0
+    ] or [1]
+    live = None
+    for accum in accum_opts:
+        lowered = lower_cell(cfg, shape, mesh, accum_steps=accum)
+        compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        live = (
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes
+        )
+        if live < HW["hbm_bytes"] * 0.94:  # leave headroom for runtime
+            break
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["accum_steps"] = accum
+    # The CPU backend float-normalizes bf16 (no native bf16 FMA): every
+    # bf16 weight/carry stack gets a hoisted f32 (+layout) copy that a TPU
+    # build does not materialize. Corrected estimate strips those copies:
+    # 2 x f32 bytes of the bf16 parameter stacks (convert + layout copy)
+    # + 1 x f32 bytes of bf16 residual carries (~= 2x param, 2x live-bf16
+    # carry). Raw and corrected are both reported; EXPERIMENTS.md §Dry-run
+    # documents the buffer-assignment evidence.
+    params_bf16 = device_bytes(params_sds) if cfg.param_dtype == "bfloat16" else 0
+    inflation = 4 * params_bf16
+    live_corr = max(live - inflation, state_b)
+    per_dev = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "live_bytes": int(live),
+        "cpu_bf16_inflation_est": int(inflation),
+        "live_bytes_tpu_corrected": int(live_corr),
+        "fits_16GB_hbm": bool(live < HW["hbm_bytes"]),
+        "fits_16GB_hbm_corrected": bool(live_corr < HW["hbm_bytes"]),
+    }
+    rec["memory_per_device"] = per_dev
+    rec["ok"] = True
+
+    if skip_probes:
+        return rec
+
+    # 2) probe compiles -> extrapolated roofline terms. Probes always use
+    # accum=1: the accumulation loop is a scan, and XLA's cost analysis
+    # counts scan bodies once — accum>1 would undercount per-step cost by
+    # that factor. (Probes never allocate, so memory fit is irrelevant.)
+    La, Lb = probe_layers(cfg)
+    ca = compile_cost(probe_cfg(cfg, La), shape, mesh, accum_steps=1)
+    cb = compile_cost(probe_cfg(cfg, Lb), shape, mesh, accum_steps=1)
+    full = extrapolate(ca, cb, cfg.num_layers)
+    # probes ran in f32; a bf16 deployment moves half the bytes (see
+    # probe_cfg docstring). FLOPs are dtype-invariant.
+    dtype_scale = 0.5 if cfg.param_dtype == "bfloat16" else 1.0
+    full = CellCost(
+        flops=full.flops,
+        bytes_accessed=full.bytes_accessed * dtype_scale,
+        collective={k: v * dtype_scale for k, v in full.collective.items()},
+        num_layers=full.num_layers,
+    )
+    # tokens processed per step
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = flops_per_token(cfg) * tokens
+    if shape.kind == "train":
+        pass  # flops_per_token already counts fwd+bwd via 6*N
+    else:
+        mf /= 3.0  # forward-only: 2*N*D
+    rl = Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        flops=full.flops * chips,  # cost_analysis is per-device post-SPMD
+        bytes_accessed=full.bytes_accessed * chips,
+        collective_bytes=full.collective["total"] * chips,
+        model_flops=mf,
+        peak_flops=HW["peak_flops_bf16"],
+        hbm_bw=HW["hbm_bw"],
+        ici_bw=HW["ici_bw"],
+        memory_fit=f"{live/1e9:.2f} GB/device",
+        collective_detail={k: v * chips for k, v in full.collective.items()},
+    )
+    rec["roofline"] = rl.row()
+    rec["probe_costs"] = {
+        "La": La,
+        "Lb": Lb,
+        "flops_a": ca.flops,
+        "flops_b": cb.flops,
+        "bytes_a": ca.bytes_accessed,
+        "bytes_b": cb.bytes_accessed,
+        "coll_a": ca.collective["total"],
+        "coll_b": cb.collective["total"],
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--skip-probes", action="store_true",
+                    help="compile-validity + memory only (multi-pod pass)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (hillclimb variants), e.g. "
+                         "--override attn_tile_f32=false --override sharding_profile=ddp")
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        elif v.isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if skip is None]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            t0 = time.time()
+            try:
+                rec = analyze_cell(
+                    arch, shape, mp,
+                    skip_probes=args.skip_probes or mp,
+                    overrides=overrides,
+                )
+                rl = rec.get("roofline")
+                extra = (
+                    f" bottleneck={rl['bottleneck']} frac={rl['roofline_fraction']:.3f}"
+                    if rl
+                    else ""
+                )
+                print(f"[OK] {tag} ({time.time()-t0:.0f}s) "
+                      f"mem={rec['memory_per_device']['live_bytes']/1e9:.2f}GB{extra}",
+                      flush=True)
+            except Exception as e:
+                rec = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}", flush=True)
+            results.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells compiled OK")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}GB"
+
+
+def render(records, show_memory=True):
+    lines = []
+    header = (
+        "| arch | shape | mesh | accum | t_compute | t_memory | t_collective | "
+        "bottleneck | useful | roofline_frac | mem/dev (corr) | fits |"
+    )
+    lines.append(header)
+    lines.append("|" + "---|" * 12)
+    for r in records:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - | "
+                f"FAILED: {r.get('error','?')[:60]} | - | - | - | - |"
+            )
+            continue
+        rl = r.get("roofline")
+        m = r.get("memory_per_device", {})
+        mem = (
+            f"{m.get('live_bytes',0)/1e9:.1f} ({m.get('live_bytes_tpu_corrected',0)/1e9:.1f})"
+        )
+        fits = "Y" if m.get("fits_16GB_hbm") else (
+            "Y*" if m.get("fits_16GB_hbm_corrected") else "N"
+        )
+        if rl:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('accum_steps','-')} "
+                f"| {rl['t_compute_s']*1e3:.1f}ms | {rl['t_memory_s']*1e3:.1f}ms "
+                f"| {rl['t_collective_s']*1e3:.1f}ms | {rl['bottleneck']} "
+                f"| {rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.3f} "
+                f"| {mem} | {fits} |"
+            )
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('accum_steps','-')} "
+                f"| - | - | - | (validity+memory pass) | - | - | {mem} | {fits} |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_files", nargs="+")
+    args = ap.parse_args()
+    for f in args.json_files:
+        with open(f) as fh:
+            recs = json.load(fh)
+        print(f"\n### {f} ({sum(r.get('ok', False) for r in recs)}/{len(recs)} OK)\n")
+        print(render(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,604 @@
+"""Shared model layers: norms, RoPE, GQA attention (blockwise/flash),
+MLPs, embeddings (PB-backed backward), and the MoE layer whose dispatch
+is Propagation Blocking (counting-sort by expert) — the paper's technique
+as a first-class framework feature.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.distributed import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models import params as pp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig):
+    if cfg.norm_type == "ln":
+        return {
+            "w": pp.ones((cfg.d_model,), ("embed_act",)),
+            "b": pp.zeros((cfg.d_model,), ("embed_act",)),
+        }
+    return {"w": pp.ones((cfg.d_model,), ("embed_act",))}
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "ln":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * p["w"] + p["b"]).astype(x.dtype)
+    var = (xf**2).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["w"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, ..., head_dim); positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    while ang.ndim < x.ndim:
+        ang = jnp.expand_dims(ang, -2)  # broadcast over head dims
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, blockwise-softmax for long sequences, KV-cache decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KH = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    p = {
+        "wq": pp.winit(ks[0], (d, H * hd), ("embed", "qkv"), dt),
+        "wk": pp.winit(ks[1], (d, KH * hd), ("embed", "qkv"), dt),
+        "wv": pp.winit(ks[2], (d, KH * hd), ("embed", "qkv"), dt),
+        "wo": pp.winit(ks[3], (H * hd, d), ("qkv", "embed"), dt, scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = pp.zeros((H * hd,), ("qkv",), dt)
+        p["bk"] = pp.zeros((KH * hd,), ("qkv",), dt)
+        p["bv"] = pp.zeros((KH * hd,), ("qkv",), dt)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _qkv(p: Params, x, kv_x, cfg: ModelConfig, positions, kv_positions):
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dh->bsh", x.astype(dt), p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", kv_x.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", kv_x.astype(dt), p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = _split_heads(q, H, hd)
+    k = _split_heads(k, KH, hd)
+    v = _split_heads(v, KH, hd)
+    if cfg.use_rope:
+        if positions is not None:
+            q = rope(q, positions, cfg.rope_theta)
+        if kv_positions is not None:
+            k = rope(k, kv_positions, cfg.rope_theta)
+    q = shd.logical(q, "batch", "seq", "heads", None)
+    k = shd.logical(k, "batch", "seq", "kv_heads", None)
+    v = shd.logical(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _direct_attention(q, k, v, causal: bool, q_offset=0, tile_f32: bool = True):
+    """q: (B,Sq,H,hd) grouped against k/v: (B,Skv,KH,hd). tile_f32=False
+    keeps the S^2 score tensor in the compute dtype at fusion boundaries
+    (reductions still run in f32 inside the fused chain)."""
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, hd)
+    sdt = jnp.float32 if tile_f32 else q.dtype
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k, preferred_element_type=sdt
+    ) * jnp.asarray(hd**-0.5, sdt)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask = qpos[:, None] >= jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(mask[None, None, None], scores, jnp.asarray(-1e30, sdt))
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def _blockwise_attention(
+    q, k, v, causal: bool, q_block: int, kv_block: int, tile_f32: bool = True
+):
+    """Flash-style online-softmax attention; memory = one (qb, kb) tile
+    per (head-group) instead of the full S^2 score matrix.
+
+    tile_f32=False keeps the score/probability tiles in bf16 at fusion
+    boundaries (max/exp still reduce in f32 inside the fused chain) —
+    the flash-standard layout that halves tile HBM traffic."""
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    Skv = k.shape[1]
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    # pad to multiples
+    pq = (-Sq) % qb
+    pk = (-Skv) % kb
+    qg = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).reshape(
+        B, (Sq + pq) // qb, qb, KH, G, hd
+    )
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).reshape(
+        B, (Skv + pk) // kb, kb, KH, hd
+    )
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).reshape(
+        B, (Skv + pk) // kb, kb, KH, hd
+    )
+    nq, nk = qg.shape[1], kp.shape[1]
+    kv_valid = (jnp.arange(nk)[:, None] * kb + jnp.arange(kb)[None, :]) < Skv
+
+    def q_step(_, qi):
+        qblk = qg[:, qi]  # (B, qb, KH, G, hd)
+        m0 = jnp.full((B, KH, G, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qb, hd), jnp.float32)
+
+        @jax.checkpoint  # flash-style bwd: recompute the (qb,kb) score
+        def kv_step(carry, ki):  # tile instead of saving it per iteration
+            m, l, acc = carry
+            kblk = kp[:, ki]
+            vblk = vp[:, ki]
+            sdt = jnp.float32 if tile_f32 else qblk.dtype
+            s_raw = jnp.einsum(
+                "bqkgh,bskh->bkgqs", qblk, kblk, preferred_element_type=sdt
+            )
+            s = s_raw.astype(jnp.float32) * hd**-0.5
+            mask = kv_valid[ki][None, None, None, None, :]
+            if causal:
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = ki * kb + jnp.arange(kb)
+                mask = jnp.logical_and(mask, (qpos[:, None] >= kpos[None, :]))
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pexp.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", pexp.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)  # (B, KH, G, qb, hd)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, B, KH, G, qb, hd) -> (B, nq*qb, KH*G*hd), slice off pad
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, KH * G * hd)
+    return out[:, :Sq]
+
+
+def blockwise_attention(q, k, v, *, causal, q_block, kv_block, tile_f32=True):
+    return _blockwise_attention(q, k, v, causal, q_block, kv_block, tile_f32)
+
+
+def attention_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    kv_src: Optional[jnp.ndarray] = None,
+    kv_positions: Optional[jnp.ndarray] = None,
+    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Self- or cross-attention.
+
+    cache: (k_cache, v_cache) of shape (B, S_max, KH, hd). When given with
+    cache_index, new k/v are written at that index (decode) and attention
+    runs over the cache (positions < cache_index + S are valid via the
+    causal mask on absolute positions).
+    """
+    B, S, _ = x.shape
+    kv_in = x if kv_src is None else kv_src
+    q, k, v = _qkv(p, x, kv_in, cfg, positions, kv_positions)
+    if cfg.ablate_attn_scores:
+        # measurement ablation (dry-run probes only): keep the QKV/WO
+        # matmuls, skip the S^2 score math — isolates the attention-tile
+        # contribution to the roofline terms exactly.
+        out = q.reshape(B, S, -1)
+        dt0 = cfg.cdtype
+        y = jnp.einsum("bsh,hd->bsd", out.astype(dt0), p["wo"].astype(dt0))
+        return shd.logical(y, "batch", "seq", "embed_act"), cache
+    new_cache = None
+    if cache is not None:
+        kc, vc = cache
+        if cache_index is not None:
+            if k.shape[1] == 1:
+                # decode: one-hot masked write — unlike a dynamic-update-
+                # slice at a traced index, this shards cleanly over a
+                # model-sharded cache seq dim (no SPMD rematerialization).
+                oh = (
+                    jnp.arange(kc.shape[1], dtype=jnp.int32) == cache_index
+                )[None, :, None, None]
+                kc = jnp.where(oh, k.astype(kc.dtype), kc)
+                vc = jnp.where(oh, v.astype(vc.dtype), vc)
+            else:
+                # prefill: writes always start at 0 (static index)
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, axis=1)
+            kc = shd.logical(kc, "batch", "seq_kv", "kv_heads", None)
+            vc = shd.logical(vc, "batch", "seq_kv", "kv_heads", None)
+        new_cache = (kc, vc)
+        k, v = kc, vc
+        # mask beyond current length via absolute-position causal mask
+        q_offset = cache_index if cache_index is not None else 0
+        out = _direct_attention(
+            q, k.astype(q.dtype), v.astype(q.dtype), causal=causal,
+            q_offset=q_offset, tile_f32=cfg.attn_tile_f32,
+        )
+    else:
+        H = cfg.num_heads
+        use_block = cfg.use_blockwise_attn and S > cfg.attn_q_block
+        if use_block:
+            out = blockwise_attention(
+                q, k, v, causal=causal, q_block=cfg.attn_q_block,
+                kv_block=cfg.attn_kv_block, tile_f32=cfg.attn_tile_f32,
+            )
+        else:
+            out = _direct_attention(q, k, v, causal=causal, tile_f32=cfg.attn_tile_f32)
+    dt = cfg.cdtype
+    y = jnp.einsum("bsh,hd->bsd", out.astype(dt), p["wo"].astype(dt))
+    y = shd.logical(y, "batch", "seq", "embed_act")
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.pdtype
+    ks = jax.random.split(key, 3)
+    if cfg.act_type == "swiglu":
+        return {
+            "w1": pp.winit(ks[0], (d, f), ("embed", "mlp"), dt),
+            "w3": pp.winit(ks[1], (d, f), ("embed", "mlp"), dt),
+            "w2": pp.winit(ks[2], (f, d), ("mlp", "embed"), dt, scale=f**-0.5),
+        }
+    return {
+        "w1": pp.winit(ks[0], (d, f), ("embed", "mlp"), dt),
+        "b1": pp.zeros((f,), ("mlp",), dt),
+        "w2": pp.winit(ks[2], (f, d), ("mlp", "embed"), dt, scale=f**-0.5),
+        "b2": pp.zeros((d,), ("embed_act",), dt),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.cdtype
+    xx = x.astype(dt)
+    if "w3" in p:
+        h = jax.nn.silu(xx @ p["w1"].astype(dt)) * (xx @ p["w3"].astype(dt))
+        h = shd.logical(h, "batch", "seq", "mlp")
+        return (h @ p["w2"].astype(dt)).astype(x.dtype)
+    h = jax.nn.gelu(xx @ p["w1"].astype(dt) + p["b1"].astype(dt))
+    h = shd.logical(h, "batch", "seq", "mlp")
+    return (h @ p["w2"].astype(dt) + p["b2"].astype(dt)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits (PB-backed backward as opt-in custom VJP)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _pb_take(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def _pb_take_fwd(table, ids):
+    # zero-byte token carrying the table's static shape[0] and dtype
+    token = jnp.zeros((table.shape[0], 0), table.dtype)
+    return jnp.take(table, ids, axis=0), (ids, token)
+
+
+def _pb_take_bwd(res, g):
+    ids, token = res
+    vocab, dt = token.shape[0], token.dtype
+    flat_ids = ids.reshape(-1)
+    flat_g = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    # PB backward: stable sort by id (Binning), sorted coalesced scatter
+    # (Bin-Read) — the commutative-PB embedding-gradient integration.
+    order = jnp.argsort(flat_ids, stable=True)
+    ids_s = jnp.take(flat_ids, order)
+    g_s = jnp.take(flat_g, order, axis=0)
+    dtable = jnp.zeros((vocab, g.shape[-1]), jnp.float32)
+    dtable = dtable.at[ids_s].add(g_s, indices_are_sorted=True)
+    return dtable.astype(dt), None
+
+
+_pb_take.defvjp(_pb_take_fwd, _pb_take_bwd)
+
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    V = cfg.padded_vocab
+    d = cfg.d_model
+    p = {"table": pp.winit(key, (V, d), ("vocab", "embed"), cfg.pdtype, scale=1.0)}
+    if cfg.learned_pos:
+        p["pos"] = pp.winit(
+            jax.random.fold_in(key, 1), (cfg.learned_pos, d), (None, "embed"), cfg.pdtype
+        )
+    if not cfg.tie_embeddings:
+        p["unembed"] = pp.winit(
+            jax.random.fold_in(key, 2), (d, V), ("embed", "vocab"), cfg.pdtype
+        )
+    return p
+
+
+def embed_apply(p: Params, ids: jnp.ndarray, cfg: ModelConfig, positions=None):
+    take = _pb_take if cfg.pb_embedding else (lambda t, i: jnp.take(t, i, axis=0))
+    x = take(p["table"], ids).astype(cfg.cdtype)
+    if cfg.learned_pos and positions is not None:
+        x = x + jnp.take(p["pos"], jnp.minimum(positions, cfg.learned_pos - 1), axis=0).astype(cfg.cdtype)
+    return shd.logical(x, "batch", "seq", "embed_act")
+
+
+def logits_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cfg.cdtype
+    if cfg.tie_embeddings:
+        w = p["table"].astype(dt).T
+    else:
+        w = p["unembed"].astype(dt)
+    logits = x.astype(dt) @ w
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    logits = shd.logical(logits, "batch", "seq", "vocab")
+    return logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MoE layer — PB dispatch (counting-sort by expert id)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.pdtype
+    ks = jax.random.split(key, 4)
+    return {
+        "wr": pp.winit(ks[0], (d, E), ("embed_act", None), jnp.float32),
+        "w1": pp.winit(ks[1], (E, d, f), ("experts", "embed", "expert_mlp"), dt),
+        "w3": pp.winit(ks[2], (E, d, f), ("experts", "embed", "expert_mlp"), dt),
+        "w2": pp.winit(ks[3], (E, f, d), ("experts", "expert_mlp", "embed"), dt, scale=f**-0.5),
+    }
+
+
+def _moe_expert_shard(x2d, wr, w1, w3, w2, cfg: ModelConfig, e_start, E_local):
+    """Route ALL local tokens; process experts [e_start, e_start+E_local).
+
+    This is Propagation Blocking verbatim: Binning = stable counting sort
+    of (token, expert) assignments by expert id into capacity-bounded
+    bins; Bin-Read = dense per-expert FFN over each bin's contiguous
+    rows. (DESIGN.md §3.2)
+    """
+    T, d = x2d.shape
+    E, k = cfg.num_experts, cfg.top_k
+    dt = cfg.cdtype
+    C = max(8, int(T * k * cfg.capacity_factor / E))  # per-expert capacity
+
+    logits = (x2d.astype(jnp.float32) @ wr.astype(jnp.float32))  # (T, E)
+    gate_w, gate_ids = jax.lax.top_k(logits, k)  # (T, k)
+    gate_w = jax.nn.softmax(gate_w, axis=-1)
+
+    flat_e = gate_ids.reshape(-1)  # (T*k,) expert of each assignment
+    local_e = flat_e - e_start
+    valid = jnp.logical_and(local_e >= 0, local_e < E_local)
+    key = jnp.where(valid, local_e, E_local)  # invalid -> overflow bin
+
+    # --- Binning: stable counting sort by expert id, capacity-clipped ---
+    order = jnp.argsort(key, stable=True)
+    key_s = jnp.take(key, order)
+    counts = jnp.bincount(key, length=E_local + 1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
+    rank = jnp.arange(key_s.shape[0], dtype=jnp.int32) - jnp.take(starts, key_s)
+    keep = jnp.logical_and(key_s < E_local, rank < C)
+    slot = jnp.where(keep, key_s * C + rank, E_local * C)  # OOB -> dropped
+    token_of = jnp.take(jnp.arange(T, dtype=jnp.int32).repeat(k), order)
+    xbuf = jnp.zeros((E_local * C, d), dt).at[slot].set(
+        jnp.take(x2d, token_of, axis=0).astype(dt), mode="drop"
+    )
+
+    # --- Bin-Read: contiguous per-expert FFN (block-diagonal matmul) ---
+    xb = xbuf.reshape(E_local, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, w1.astype(dt))) * jnp.einsum(
+        "ecd,edf->ecf", xb, w3.astype(dt)
+    )
+    yb = jnp.einsum("ecf,efd->ecd", h, w2.astype(dt)).reshape(E_local * C, d)
+
+    # --- combine: gather each kept assignment's row, weight, accumulate ---
+    slot_of_assign = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        jnp.where(keep, slot, -1).astype(jnp.int32)
+    )
+    safe = jnp.where(slot_of_assign >= 0, slot_of_assign, 0)
+    rows = jnp.take(yb, safe, axis=0)
+    rows = jnp.where((slot_of_assign >= 0)[:, None], rows, 0)
+    w = gate_w.reshape(-1).astype(dt)
+    out = jnp.zeros((T, d), dt).at[jnp.arange(T, dtype=jnp.int32).repeat(k)].add(
+        rows * w[:, None]
+    )
+    return out
+
+
+def _moe_dense_oracle(x2d, wr, w1, w3, w2, cfg: ModelConfig):
+    """O(T*E) dense reference (smoke/testing only)."""
+    dt = cfg.cdtype
+    logits = x2d.astype(jnp.float32) @ wr.astype(jnp.float32)
+    gw, gi = jax.lax.top_k(logits, cfg.top_k)
+    gw = jax.nn.softmax(gw, axis=-1)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", x2d.astype(dt), w1.astype(dt))) * jnp.einsum(
+        "td,edf->tef", x2d.astype(dt), w3.astype(dt)
+    )
+    y_all = jnp.einsum("tef,efd->ted", h, w2.astype(dt))  # (T, E, d)
+    mask = jax.nn.one_hot(gi, cfg.num_experts, dtype=dt) * gw[..., None].astype(dt)
+    gates = mask.sum(1)  # (T, E)
+    return jnp.einsum("te,ted->td", gates, y_all)
+
+
+def _moe_weight_stationary(p, x, cfg: ModelConfig, mesh):
+    """Decode-time MoE: weights stay put; token activations (tiny at one
+    token/slot) are resharded onto the weight grid instead of all-gathering
+    the FSDP'd expert weights every step. Collectives per layer shrink
+    from O(expert-weight bytes) to O(token bytes) — the decode analogue
+    of PB's "move the small irregular stream, not the big state"."""
+    B, S, d = x.shape
+    n_model = mesh.shape["model"]
+    E, k = cfg.num_experts, cfg.top_k
+    E_local = E // n_model
+    dt = cfg.cdtype
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def f(xl, wr, w1, w3, w2):
+        # xl: (B, S, d_local) — tokens replicated, features sharded
+        T = B * S
+        x2 = xl.reshape(T, -1).astype(jnp.float32)
+        logits = jax.lax.psum(x2 @ wr.astype(jnp.float32), data_axes)  # (T, E)
+        gate_w, gate_ids = jax.lax.top_k(logits, k)
+        gate_w = jax.nn.softmax(gate_w, axis=-1)
+        shard = jax.lax.axis_index("model")
+        e_start = shard * E_local
+        C = max(8, int(T * k * cfg.capacity_factor / E))
+        flat_e = gate_ids.reshape(-1)
+        local_e = flat_e - e_start
+        valid = jnp.logical_and(local_e >= 0, local_e < E_local)
+        key = jnp.where(valid, local_e, E_local)
+        order = jnp.argsort(key, stable=True)
+        key_s = jnp.take(key, order)
+        counts = jnp.bincount(key, length=E_local + 1)
+        starts = jnp.concatenate(
+            [jnp.zeros(1, jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+        )
+        rank = jnp.arange(key_s.shape[0], dtype=jnp.int32) - jnp.take(starts, key_s)
+        keep = jnp.logical_and(key_s < E_local, rank < C)
+        slot = jnp.where(keep, key_s * C + rank, E_local * C)
+        token_of = jnp.take(jnp.arange(T, dtype=jnp.int32).repeat(k), order)
+        xb = jnp.zeros((E_local * C, x2.shape[1]), dt).at[slot].set(
+            jnp.take(x2, token_of, axis=0).astype(dt), mode="drop"
+        ).reshape(E_local, C, -1)
+        # d-contractions complete across the data axes BEFORE nonlinearity
+        h1 = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xb, w1.astype(dt)), data_axes)
+        h3 = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xb, w3.astype(dt)), data_axes)
+        h = jax.nn.silu(h1) * h3
+        yb = jnp.einsum("ecf,efd->ecd", h, w2.astype(dt)).reshape(E_local * C, -1)
+        slot_of = jnp.zeros((T * k,), jnp.int32).at[order].set(
+            jnp.where(keep, slot, -1).astype(jnp.int32)
+        )
+        safe = jnp.where(slot_of >= 0, slot_of, 0)
+        rows = jnp.take(yb, safe, axis=0)
+        rows = jnp.where((slot_of >= 0)[:, None], rows, 0)
+        w_g = gate_w.reshape(-1).astype(dt)
+        out = jnp.zeros((T, yb.shape[1]), dt).at[
+            jnp.arange(T, dtype=jnp.int32).repeat(k)
+        ].add(rows * w_g[:, None])
+        out = jax.lax.psum(out, "model")  # sum expert-shard contributions
+        return out.reshape(B, S, -1)
+
+    out = shard_map(
+        f,
+        mesh=mesh,
+        in_specs=(
+            P(None, None, dspec),
+            P(dspec, None),
+            P("model", dspec, None),
+            P("model", dspec, None),
+            P("model", None, dspec),
+        ),
+        out_specs=P(None, None, dspec),
+        check_vma=False,
+    )(x, p["wr"], p["w1"], p["w3"], p["w2"])
+    return shd.logical(out.astype(x.dtype), "batch", "seq", "embed_act")
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    B, S, d = x.shape
+    mesh = shd.active_mesh()
+    if cfg.moe_dispatch == "dense":
+        out = _moe_dense_oracle(x.reshape(-1, d), p["wr"], p["w1"], p["w3"], p["w2"], cfg)
+        return out.reshape(B, S, d).astype(x.dtype)
+    n_model = mesh.shape.get("model", 1) if mesh is not None else 1
+    if (
+        mesh is not None
+        and cfg.moe_weight_stationary_decode
+        and S == 1
+        and n_model > 1
+        and cfg.num_experts % n_model == 0
+        and any(a in mesh.shape for a in ("pod", "data"))
+    ):
+        return _moe_weight_stationary(p, x, cfg, mesh)
+    if mesh is None or n_model == 1 or cfg.num_experts % n_model != 0:
+        out = _moe_expert_shard(
+            x.reshape(-1, d), p["wr"], p["w1"], p["w3"], p["w2"], cfg, 0, cfg.num_experts
+        )
+        return out.reshape(B, S, d).astype(x.dtype)
+
+    E_local = cfg.num_experts // n_model
+    ba = shd.batch_axes(mesh)
+
+    def f(xl, wr, w1, w3, w2):
+        # xl: (B_local, S, d) replicated across 'model'; each member owns
+        # E_local experts — dispatch needs NO communication (DESIGN.md §5),
+        # only the output partial-sum is reduced (same collective as a TP
+        # FFN). This is the ICI level of the COBRA hierarchy: the coarse
+        # "device bin" is decided by expert id before any data moves.
+        shard = jax.lax.axis_index("model")
+        out = _moe_expert_shard(
+            xl.reshape(-1, d), wr, w1, w3, w2, cfg, shard * E_local, E_local
+        )
+        return jax.lax.psum(out.reshape(xl.shape), "model")
+
+    return shard_map(
+        f,
+        mesh=mesh,
+        in_specs=(
+            P(ba, None, None),
+            P(None, None),
+            P("model", None, None),
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=P(ba, None, None),
+        check_vma=False,
+    )(x, p["wr"], p["w1"], p["w3"], p["w2"]).astype(x.dtype)

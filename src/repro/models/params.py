@@ -1,0 +1,98 @@
+"""Parameter creation with logical-axis metadata.
+
+Init functions build a tree of ``Boxed(value, axes)`` leaves; ``unbox``
+splits it into the value tree (used by apply/optimizer) and the axes
+tree (used to build NamedShardings for pjit in_shardings and for the
+dry-run). Keeping both derived from one construction site avoids the
+classic drift between parameters and their sharding annotations.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Boxed(NamedTuple):
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+class _Abstract(threading.local):
+    on = False
+
+
+_ABS = _Abstract()
+
+
+@contextlib.contextmanager
+def abstract_init():
+    """Within this context, param/state constructors return
+    ShapeDtypeStructs instead of arrays — the dry-run builds full-size
+    model/optimizer/cache trees with zero allocation."""
+    prev = _ABS.on
+    _ABS.on = True
+    try:
+        yield
+    finally:
+        _ABS.on = prev
+
+
+def is_abstract() -> bool:
+    return _ABS.on
+
+
+def winit(key, shape, axes, dtype=jnp.float32, scale: Optional[float] = None) -> Boxed:
+    """Truncated-normal weight with fan-in scaling by default."""
+    assert len(axes) == len(shape), (shape, axes)
+    if _ABS.on:
+        return Boxed(jax.ShapeDtypeStruct(shape, dtype), tuple(axes))
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    s = scale if scale is not None else fan_in**-0.5
+    v = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * s).astype(
+        dtype
+    )
+    return Boxed(v, tuple(axes))
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> Boxed:
+    assert len(axes) == len(shape)
+    if _ABS.on:
+        return Boxed(jax.ShapeDtypeStruct(shape, dtype), tuple(axes))
+    return Boxed(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones(shape, axes, dtype=jnp.float32) -> Boxed:
+    assert len(axes) == len(shape)
+    if _ABS.on:
+        return Boxed(jax.ShapeDtypeStruct(shape, dtype), tuple(axes))
+    return Boxed(jnp.ones(shape, dtype), tuple(axes))
+
+
+def unbox(tree):
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+def stack_boxed(trees):
+    """Stack a list of identically-structured Boxed trees along a new
+    leading 'layers' axis (for scan-over-layers). Works on abstract
+    (ShapeDtypeStruct) values too."""
+
+    def _stack(*leaves):
+        v0 = leaves[0].value
+        if isinstance(v0, jax.ShapeDtypeStruct):
+            vals = jax.ShapeDtypeStruct((len(leaves),) + tuple(v0.shape), v0.dtype)
+        else:
+            vals = jnp.stack([l.value for l in leaves])
+        return Boxed(vals, ("layers",) + leaves[0].axes)
+
+    return jax.tree.map(_stack, *trees, is_leaf=is_boxed)

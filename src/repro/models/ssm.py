@@ -1,0 +1,394 @@
+"""Recurrent blocks: Mamba2 (SSD, chunkwise-parallel), xLSTM's mLSTM and
+sLSTM.
+
+Chunkwise-parallel formulations keep the heavy math in batched einsums
+*outside* the sequential scan (the inter-chunk state recurrence has a
+tiny elementwise body), which matters twice on TPU: the MXU sees large
+matmuls, and the dry-run's HLO cost analysis (which counts loop bodies
+once) stays honest.
+
+Numerics adaptation (DESIGN.md §7): xLSTM's exponential input gating is
+replaced by sigmoid gating so the chunked-parallel train path and the
+recurrent decode path are exactly equivalent without a max-stabilizer
+state; matrix memory, normalizer, and per-head gating are preserved.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pp
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD with scalar-per-head decay, shared B/C across heads)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    P = cfg.head_dim  # reuse head_dim as SSD head size
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, H, P, N = mamba2_dims(cfg)
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    return {
+        "in_proj": pp.winit(
+            ks[0], (d, 2 * d_inner + 2 * N + H), ("embed", "mlp"), dt
+        ),
+        "conv_w": pp.winit(ks[1], (K, d_inner), ("conv", "mlp"), dt, scale=K**-0.5),
+        "A_log": pp.zeros((H,), ("state",), jnp.float32),
+        "D": pp.ones((H,), ("state",), jnp.float32),
+        "dt_bias": pp.zeros((H,), ("state",), jnp.float32),
+        "norm_w": pp.ones((d_inner,), ("mlp",), jnp.float32),
+        "out_proj": pp.winit(ks[2], (d_inner, d), ("mlp", "embed"), dt, scale=d_inner**-0.5),
+    }
+
+
+def _split_inproj(p, x, cfg):
+    d_inner, H, P, N = mamba2_dims(cfg)
+    dt_c = cfg.cdtype
+    z, xs, Bm, Cm, dtr = jnp.split(
+        x.astype(dt_c) @ p["in_proj"].astype(dt_c),
+        [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1,
+    )
+    return z, xs, Bm, Cm, dtr
+
+
+def _causal_conv(xs, w, conv_state=None):
+    """Depthwise causal conv along seq. xs: (B,S,C), w: (K,C).
+    conv_state: (B,K-1,C) history for decode."""
+    K = w.shape[0]
+    if conv_state is not None:
+        xs_full = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+        new_state = xs_full[:, -(K - 1) :, :]
+    else:
+        xs_full = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = xs_full[:, -(K - 1) :, :]
+    out = sum(w[k] * xs_full[:, k : k + xs.shape[1], :] for k in range(K))
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    decode: bool = False,
+):
+    """x: (B,S,d). state = (ssm_state (B,H,N,P) f32, conv_state (B,K-1,d_inner)).
+    decode=True expects S == 1 and uses the recurrent step."""
+    B, S, d = x.shape
+    d_inner, H, P, N = mamba2_dims(cfg)
+    z, xs, Bm, Cm, dtr = _split_inproj(p, x, cfg)
+    conv_state = state[1] if state is not None else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"].astype(xs.dtype), conv_state)
+    xh = xs.reshape(B, S, H, P).astype(jnp.float32)
+    dt_s = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -dt_s * jnp.exp(p["A_log"])  # (B,S,H) negative
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    xdt = xh * dt_s[..., None]  # (B,S,H,P)
+
+    if decode:
+        h_prev = state[0] if state is not None else jnp.zeros((B, H, N, P), jnp.float32)
+        a = jnp.exp(a_log[:, 0])  # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", Bm[:, 0], xdt[:, 0])
+        h_new = h_prev * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], h_new)[:, None]  # (B,1,H,P)
+        y = y + p["D"][None, None, :, None] * xh
+        new_state = (h_new, new_conv)
+    else:
+        c = min(cfg.mlstm_chunk, S)
+        pad = (-S) % c
+        if pad:
+            xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        Sp = S + pad
+        nc = Sp // c
+        xdt_c = xdt.reshape(B, nc, c, H, P)
+        al_c = a_log.reshape(B, nc, c, H)
+        B_c = Bm.reshape(B, nc, c, N)
+        C_c = Cm.reshape(B, nc, c, N)
+        lf = jnp.cumsum(al_c, axis=2)  # (B,nc,c,H) inclusive within-chunk
+        # intra-chunk (attention-like), all chunks batched:
+        scores = jnp.einsum("bkln,bksn->bkls", C_c, B_c)  # (B,nc,c,c)
+        decay = jnp.exp(lf[:, :, :, None, :] - lf[:, :, None, :, :])  # (B,nc,t,s,H)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        w_ts = jnp.where(causal[None, None, :, :, None], scores[..., None] * decay, 0.0)
+        y_intra = jnp.einsum("bklsh,bkshp->bklhp", w_ts, xdt_c)
+        # chunk summaries
+        end_decay = jnp.exp(lf[:, :, -1:, :] - lf)  # (B,nc,c,H)
+        chunk_state = jnp.einsum("bkln,bklh,bklhp->bkhnp", B_c, end_decay, xdt_c)
+        chunk_decay = jnp.exp(lf[:, :, -1, :])  # (B,nc,H)
+
+        def step(h, inp):
+            cs, cd = inp
+            h_new = h * cd[:, :, None, None] + cs
+            return h_new, h  # emit PREVIOUS state for this chunk
+
+        h0 = (
+            state[0].astype(jnp.float32)
+            if state is not None
+            else jnp.zeros((B, H, N, P), jnp.float32)
+        )
+        h_last, h_prevs = jax.lax.scan(
+            step,
+            h0,
+            (
+                jnp.moveaxis(chunk_state, 1, 0),
+                jnp.moveaxis(chunk_decay, 1, 0),
+            ),
+        )
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,N,P)
+        y_inter = jnp.einsum(
+            "bkln,bkhnp,bklh->bklhp", C_c, h_prevs, jnp.exp(lf)
+        )
+        y = (y_intra + y_inter).reshape(B, Sp, H, P)[:, :S]
+        y = y + p["D"][None, None, :, None] * xh[:, :S]
+        new_state = (h_last, new_conv)
+
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = (y**2).mean(-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_w"]
+    out = y.astype(cfg.cdtype) @ p["out_proj"].astype(cfg.cdtype)
+    return out.astype(x.dtype), new_state
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N = mamba2_dims(cfg)
+    return (
+        jnp.zeros((batch, H, N, P), jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, sigmoid gating, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    return {
+        # q,k,v + o gate + i,f scalars per head
+        "in_proj": pp.winit(ks[0], (d, 3 * H * hd + H * hd + 2 * H), ("embed", "qkv"), dt),
+        "out_proj": pp.winit(ks[1], (H * hd, d), ("qkv", "embed"), dt, scale=(H * hd) ** -0.5),
+        "norm_w": pp.ones((H * hd,), ("qkv",), jnp.float32),
+    }
+
+
+def _mlstm_split(p, x, cfg):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    proj = x.astype(cfg.cdtype) @ p["in_proj"].astype(cfg.cdtype)
+    q, k, v, o, g = jnp.split(
+        proj, [H * hd, 2 * H * hd, 3 * H * hd, 4 * H * hd], axis=-1
+    )
+    B, S = x.shape[:2]
+    shp = (B, S, H, hd)
+    i_raw, f_raw = jnp.split(g.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    return (
+        q.reshape(shp).astype(jnp.float32) * hd**-0.5,
+        k.reshape(shp).astype(jnp.float32),
+        v.reshape(shp).astype(jnp.float32),
+        jax.nn.sigmoid(o.reshape(shp).astype(jnp.float32)),
+        jax.nn.sigmoid(i_raw),
+        jax.nn.sigmoid(f_raw),
+    )
+
+
+def mlstm_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    decode: bool = False,
+):
+    """state = (S (B,H,hd,hd), n (B,H,hd))."""
+    B, S_len, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q, k, v, o, ig, fg = _mlstm_split(p, x, cfg)
+    if state is None:
+        St = jnp.zeros((B, H, hd, hd), jnp.float32)
+        nt = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        St, nt = state
+
+    if decode:
+        f0 = fg[:, 0][..., None, None]
+        upd = jnp.einsum("bhk,bhv->bhkv", k[:, 0], v[:, 0] * ig[:, 0][..., None])
+        St = St * f0 + upd
+        nt = nt * fg[:, 0][..., None] + k[:, 0] * ig[:, 0][..., None]
+        num = jnp.einsum("bhk,bhkv->bhv", q[:, 0], St)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, 0], nt))[..., None] + 1e-6
+        y = (o[:, 0] * num / den)[:, None]  # (B,1,H,hd)
+        new_state = (St, nt)
+    else:
+        c = min(cfg.mlstm_chunk, S_len)
+        pad = (-S_len) % c
+        if pad:
+            q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+            ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)))
+            fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        Sp = S_len + pad
+        nc = Sp // c
+        qc = q.reshape(B, nc, c, H, hd)
+        kc = k.reshape(B, nc, c, H, hd)
+        vc = v.reshape(B, nc, c, H, hd)
+        ic = ig.reshape(B, nc, c, H)
+        lf = jnp.cumsum(jnp.log(fg.reshape(B, nc, c, H) + 1e-30), axis=2)
+        # intra-chunk
+        decay = jnp.exp(lf[:, :, :, None, :] - lf[:, :, None, :, :])  # (B,nc,t,s,H)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        w_ts = jnp.where(
+            causal[None, None, :, :, None],
+            decay * ic[:, :, None, :, :],
+            0.0,
+        )
+        scores = jnp.einsum("bkthd,bkshd->bktsh", qc, kc)
+        num_intra = jnp.einsum("bktsh,bktsh,bkshd->bkthd", scores, w_ts, vc)
+        den_intra = jnp.einsum("bktsh,bktsh->bkth", scores, w_ts)
+        # chunk summaries
+        end_decay = jnp.exp(lf[:, :, -1:, :] - lf) * ic  # (B,nc,c,H)
+        cS = jnp.einsum("bkshd,bksh,bkshe->bkhde", kc, end_decay, vc)
+        cn = jnp.einsum("bkshd,bksh->bkhd", kc, end_decay)
+        cdec = jnp.exp(lf[:, :, -1, :])  # (B,nc,H)
+
+        def step(carry, inp):
+            S_c, n_c = carry
+            cs, cnn, cd = inp
+            S_new = S_c * cd[..., None, None] + cs
+            n_new = n_c * cd[..., None] + cnn
+            return (S_new, n_new), (S_c, n_c)
+
+        (S_last, n_last), (S_prevs, n_prevs) = jax.lax.scan(
+            step,
+            (St, nt),
+            (
+                jnp.moveaxis(cS, 1, 0),
+                jnp.moveaxis(cn, 1, 0),
+                jnp.moveaxis(cdec, 1, 0),
+            ),
+        )
+        S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B,nc,H,hd,hd)
+        n_prevs = jnp.moveaxis(n_prevs, 0, 1)
+        efl = jnp.exp(lf)
+        num_inter = jnp.einsum("bkthd,bkhde,bkth->bkthe", qc, S_prevs, efl)
+        den_inter = jnp.einsum("bkthd,bkhd,bkth->bkth", qc, n_prevs, efl)
+        num = (num_intra + num_inter).reshape(B, Sp, H, hd)[:, :S_len]
+        den = (den_intra + den_inter).reshape(B, Sp, H)[:, :S_len]
+        y = o[:, :S_len] * num / (jnp.abs(den)[..., None] + 1e-6)
+        new_state = (S_last, n_last)
+
+    y = y.reshape(B, S_len, H * hd)
+    var = (y**2).mean(-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_w"]
+    out = y.astype(cfg.cdtype) @ p["out_proj"].astype(cfg.cdtype)
+    return out.astype(x.dtype), new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return (
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent gates — genuinely sequential)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    dt = cfg.pdtype
+    return {
+        "w_in": pp.winit(ks[0], (d, 4 * H * hd), ("embed", "qkv"), dt),
+        "r": pp.winit(ks[1], (H, hd, 4 * hd), ("heads", None, None), dt, scale=hd**-0.5),
+        "b": pp.zeros((4 * H * hd,), ("qkv",), jnp.float32),
+        "out_proj": pp.winit(ks[2], (H * hd, d), ("qkv", "embed"), dt, scale=(H * hd) ** -0.5),
+        "norm_w": pp.ones((H * hd,), ("qkv",), jnp.float32),
+    }
+
+
+def _slstm_cell(gates, c, n, h_unused):
+    """gates: (B,H,hd,4) raw [i,f,z,o]. Stabilizer-free sigmoid gating."""
+    i = jax.nn.sigmoid(gates[..., 0])
+    f = jax.nn.sigmoid(gates[..., 1])
+    z = jnp.tanh(gates[..., 2])
+    o = jax.nn.sigmoid(gates[..., 3])
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / (n_new + 1e-6)
+    return c_new, n_new, h_new
+
+
+def slstm_apply(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None,
+    decode: bool = False,
+):
+    """state = (c, n, h) each (B,H,hd) f32. Sequential over time."""
+    B, S_len, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    pre = (x.astype(cfg.cdtype) @ p["w_in"].astype(cfg.cdtype)).astype(jnp.float32)
+    pre = pre + p["b"]
+    pre = pre.reshape(B, S_len, H, hd, 4)
+    if state is None:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        c0, n0, h0 = state
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, g_t):
+        c, n, h = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h, r).reshape(B, H, hd, 4)
+        c2, n2, h2 = _slstm_cell(g_t + rec, c, n, h)
+        return (c2, n2, h2), h2
+
+    if decode:
+        (c2, n2, h2), y_t = step((c0, n0, h0), pre[:, 0])
+        ys = y_t[:, None]
+        new_state = (c2, n2, h2)
+    else:
+        (cl, nl, hl), ys = jax.lax.scan(step, (c0, n0, h0), jnp.moveaxis(pre, 1, 0))
+        ys = jnp.moveaxis(ys, 0, 1)
+        new_state = (cl, nl, hl)
+
+    y = ys.reshape(B, S_len, H * hd)
+    var = (y**2).mean(-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_w"]
+    out = y.astype(cfg.cdtype) @ p["out_proj"].astype(cfg.cdtype)
+    return out.astype(x.dtype), new_state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.num_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return (z, z, z)

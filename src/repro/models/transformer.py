@@ -1,0 +1,574 @@
+"""Model assembly for all assigned architecture families.
+
+Families (cfg.family):
+  dense / moe — decoder-only LM; MoE swaps the MLP for the PB-dispatch
+                expert layer.
+  vlm         — decoder LM with one cross-attention layer per
+                ``cross_attn_every`` (Llama-3.2-Vision); image patch
+                embeddings arrive pre-computed (stub frontend per spec).
+  ssm         — xLSTM: alternating mLSTM / sLSTM cycles.
+  hybrid      — Zamba2: ``attn_every`` Mamba2 blocks per shared
+                full-attention block application (block weights shared,
+                per-use norms unshared).
+  encdec      — Whisper: bidirectional encoder over stub frame
+                embeddings + causal decoder with cross-attention.
+
+Layers are grouped into *cycles*; cycle parameters are stacked and the
+stack is scanned (``cfg.scan_layers``) or indexed in an unrolled Python
+loop — checkpoints are layout-identical either way. Every cycle type
+threads an explicit state pytree so the same code path serves training
+(state=None semantics), prefill (build cache) and decode (step cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import params as pp
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+class StepState(NamedTuple):
+    """Decode-time state: per-cycle caches + current position."""
+
+    caches: Any
+    index: jnp.ndarray  # scalar int32: next write position
+
+
+# ---------------------------------------------------------------------------
+# cycle definitions per family
+# ---------------------------------------------------------------------------
+
+
+def _num_cycles(cfg: ModelConfig) -> int:
+    if cfg.family == "vlm":
+        assert cfg.num_layers % cfg.cross_attn_every == 0
+        return cfg.num_layers // cfg.cross_attn_every
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_every == 0
+        return cfg.num_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        assert cfg.num_layers % 2 == 0
+        return cfg.num_layers // 2
+    return cfg.num_layers
+
+
+def _init_dense_layer(
+    key, cfg: ModelConfig, cross: bool = False, self_attn: bool = True
+) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln2": L.init_norm(cfg)}
+    if self_attn:
+        p["ln1"] = L.init_norm(cfg)
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if cfg.family == "moe":
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if cross:
+        p["lnx"] = L.init_norm(cfg)
+        p["xattn"] = L.init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _init_cycle(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    if cfg.family in ("dense", "moe"):
+        return _init_dense_layer(ks[0], cfg)
+    if cfg.family == "vlm":
+        n_self = cfg.cross_attn_every - 1
+        selfs = [_init_dense_layer(jax.random.fold_in(ks[0], j), cfg) for j in range(n_self)]
+        return {
+            "self": pp.stack_boxed(selfs),
+            # vision cross-attn layers replace self-attention (Llama-3.2)
+            "cross": _init_dense_layer(ks[1], cfg, cross=True, self_attn=False),
+        }
+    if cfg.family == "hybrid":
+        mambas = [
+            {"ln": L.init_norm(cfg), "mamba": S.init_mamba2(jax.random.fold_in(ks[0], j), cfg)}
+            for j in range(cfg.attn_every)
+        ]
+        return {
+            "mamba": pp.stack_boxed(mambas),
+            "attn_ln": L.init_norm(cfg),  # per-use (unshared) norm
+        }
+    if cfg.family == "ssm":
+        return {
+            "ln_m": L.init_norm(cfg),
+            "mlstm": S.init_mlstm(ks[0], cfg),
+            "ln_s": L.init_norm(cfg),
+            "slstm": S.init_slstm(ks[1], cfg),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns a Boxed tree (use params.unbox for values + sharding axes)."""
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": L.init_embedding(ks[0], cfg), "final_ln": L.init_norm(cfg)}
+    if cfg.family == "encdec":
+        enc = [
+            _init_dense_layer(jax.random.fold_in(ks[1], j), cfg)
+            for j in range(cfg.encoder_layers)
+        ]
+        dec = [
+            _init_dense_layer(jax.random.fold_in(ks[2], j), cfg, cross=True)
+            for j in range(cfg.num_layers)
+        ]
+        p["enc_blocks"] = pp.stack_boxed(enc)
+        p["dec_blocks"] = pp.stack_boxed(dec)
+        p["enc_ln"] = L.init_norm(cfg)
+        p["enc_pos"] = pp.winit(ks[3], (cfg.encoder_seq or 1500, cfg.d_model), (None, "embed"), cfg.pdtype)
+        return p
+    cycles = [_init_cycle(jax.random.fold_in(ks[1], i), cfg) for i in range(_num_cycles(cfg))]
+    p["blocks"] = pp.stack_boxed(cycles)
+    if cfg.family == "hybrid":
+        p["shared_attn"] = {
+            "attn": L.init_attention(ks[2], cfg),
+            "ln2": L.init_norm(cfg),
+            "mlp": L.init_mlp(ks[3], cfg),
+        }
+    if cfg.family == "vlm":
+        fd = cfg.frontend_dim or cfg.d_model
+        p["img_proj"] = pp.winit(ks[4], (fd, cfg.d_model), (None, "embed"), cfg.pdtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _czeros(shape, axes, dtype):
+    """Cache tensor constructor: ShapeDtypeStruct under abstract_init (the
+    dry-run path — carries sharding axes), else a logically-sharded zeros."""
+    if pp.is_abstract():
+        return pp.Boxed(jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)), tuple(axes))
+    x = jnp.zeros(shape, dtype)
+    return pp.Boxed(shd.logical(x, *axes), tuple(axes))
+
+
+def _kv_cache(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    axes = ("batch", "seq_kv", "kv_heads", None)
+    return (_czeros(shape, axes, cfg.cdtype), _czeros(shape, axes, cfg.cdtype))
+
+
+def _mamba_state(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N = S.mamba2_dims(cfg)
+    return (
+        _czeros((batch, H, N, P), ("batch", "heads", None, None), jnp.float32),
+        _czeros((batch, cfg.ssm_conv - 1, d_inner), ("batch", None, "mlp"), jnp.float32),
+    )
+
+
+def _mlstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return (
+        _czeros((batch, H, hd, hd), ("batch", "heads", None, None), jnp.float32),
+        _czeros((batch, H, hd), ("batch", "heads", None), jnp.float32),
+    )
+
+
+def _slstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return tuple(
+        _czeros((batch, H, hd), ("batch", "heads", None), jnp.float32) for _ in range(3)
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, img_tokens: int = 0):
+    """Decode/prefill state. Under ``params.abstract_init`` returns a
+    Boxed tree of ShapeDtypeStructs (+ index SDS) for the dry-run."""
+    nc = _num_cycles(cfg) if cfg.family != "encdec" else cfg.num_layers
+
+    def stack(fn, n):
+        return pp.stack_boxed([fn() for _ in range(n)])
+
+    if cfg.family in ("dense", "moe"):
+        caches = stack(lambda: {"kv": _kv_cache(cfg, batch, max_len)}, nc)
+    elif cfg.family == "vlm":
+        n_self = cfg.cross_attn_every - 1
+        caches = stack(
+            lambda: {
+                "self": stack(lambda: _kv_cache(cfg, batch, max_len), n_self),
+                "cross": _kv_cache(cfg, batch, img_tokens or cfg.num_image_tokens),
+            },
+            nc,
+        )
+    elif cfg.family == "hybrid":
+        caches = stack(
+            lambda: {
+                "mamba": stack(lambda: _mamba_state(cfg, batch), cfg.attn_every),
+                "kv": _kv_cache(cfg, batch, max_len),
+            },
+            nc,
+        )
+    elif cfg.family == "ssm":
+        caches = stack(
+            lambda: {"mlstm": _mlstm_state(cfg, batch), "slstm": _slstm_state(cfg, batch)},
+            nc,
+        )
+    elif cfg.family == "encdec":
+        caches = stack(
+            lambda: {
+                "self": _kv_cache(cfg, batch, max_len),
+                "cross": _kv_cache(cfg, batch, cfg.encoder_seq or 1500),
+            },
+            nc,
+        )
+    else:
+        raise ValueError(cfg.family)
+    if pp.is_abstract():
+        index = pp.Boxed(jax.ShapeDtypeStruct((), jnp.int32), ())
+        return StepState(caches=caches, index=index)
+    values, _ = pp.unbox(caches)
+    return StepState(caches=values, index=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# cycle application (one function per family; mode in {train, prefill, decode})
+# ---------------------------------------------------------------------------
+
+
+def _apply_dense_layer(
+    pl,
+    x,
+    cfg,
+    positions,
+    cache,
+    cache_index,
+    causal=True,
+    cross_src=None,
+    cross_cache=None,
+    decode=False,
+):
+    """One transformer layer. cache: self-attn (k,v) or None.
+    cross_src: raw source activations to project k/v from (train/prefill);
+    cross_cache: existing (k,v) to update (prefill) or read (decode)."""
+    new_kv = None
+    if "attn" in pl:
+        h = L.apply_norm(pl["ln1"], x, cfg)
+        attn_out, new_kv = L.attention_apply(
+            pl["attn"],
+            h,
+            cfg,
+            positions=positions,
+            cache=cache,
+            cache_index=cache_index,
+            causal=causal,
+        )
+        x = x + attn_out
+    new_cross = None
+    if "xattn" in pl and (cross_src is not None or cross_cache is not None):
+        h = L.apply_norm(pl["lnx"], x, cfg)
+        if decode and cross_cache is not None:
+            # k/v already projected at prefill
+            xo, _ = L.attention_apply(
+                pl["xattn"], h, cfg, positions=None, cache=cross_cache,
+                cache_index=None, causal=False,
+            )
+            new_cross = cross_cache
+        else:
+            xo, new_cross = L.attention_apply(
+                pl["xattn"],
+                h,
+                cfg,
+                positions=None,
+                kv_src=cross_src,
+                kv_positions=None,
+                cache=cross_cache,
+                cache_index=None if cross_cache is None else jnp.zeros((), jnp.int32),
+                causal=False,
+            )
+        x = x + xo
+    h = L.apply_norm(pl["ln2"], x, cfg)
+    if "moe" in pl:
+        x = x + L.moe_apply(pl["moe"], h, cfg)
+    else:
+        x = x + L.mlp_apply(pl["mlp"], h, cfg)
+    return x, new_kv, new_cross
+
+
+def _cycle_apply(pc, x, cfg, positions, cache, index, shared, kv_src, decode):
+    """Apply one cycle. cache/new_cache: this cycle's state pytree."""
+    if cfg.family in ("dense", "moe"):
+        kv = cache["kv"] if cache is not None else None
+        x, new_kv, _ = _apply_dense_layer(
+            pl=pc, x=x, cfg=cfg, positions=positions, cache=kv, cache_index=index, decode=decode
+        )
+        return x, ({"kv": new_kv} if new_kv is not None else None)
+    if cfg.family == "vlm":
+        n_self = cfg.cross_attn_every - 1
+        new_selfs = []
+        for j in range(n_self):
+            plj = jax.tree.map(lambda a: a[j], pc["self"])
+            kv = jax.tree.map(lambda a: a[j], cache["self"]) if cache is not None else None
+            x, new_kv, _ = _apply_dense_layer(
+                plj, x, cfg, positions, kv, index, decode=decode
+            )
+            new_selfs.append(new_kv)
+        x, _, new_cross = _apply_dense_layer(
+            pc["cross"],
+            x,
+            cfg,
+            positions,
+            None,
+            None,
+            cross_src=kv_src,
+            cross_cache=cache["cross"] if cache is not None else None,
+            decode=decode,
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "self": jax.tree.map(lambda *xs: jnp.stack(xs), *new_selfs),
+                "cross": new_cross if new_cross is not None else cache["cross"],
+            }
+        return x, new_cache
+    if cfg.family == "hybrid":
+        new_mambas = []
+        for j in range(cfg.attn_every):
+            plj = jax.tree.map(lambda a: a[j], pc["mamba"])
+            st = jax.tree.map(lambda a: a[j], cache["mamba"]) if cache is not None else None
+            h = L.apply_norm(plj["ln"], x, cfg)
+            out, new_st = S.mamba2_apply(plj["mamba"], h, cfg, state=st, decode=decode)
+            x = x + out
+            new_mambas.append(new_st)
+        # shared attention block (weights shared; per-cycle norm unshared)
+        h = L.apply_norm(pc["attn_ln"], x, cfg)
+        kv = cache["kv"] if cache is not None else None
+        attn_out, new_kv = L.attention_apply(
+            shared["attn"], h, cfg, positions=positions, cache=kv, cache_index=index, causal=True
+        )
+        x = x + attn_out
+        h = L.apply_norm(shared["ln2"], x, cfg)
+        x = x + L.mlp_apply(shared["mlp"], h, cfg)
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mambas),
+                "kv": new_kv,
+            }
+        return x, new_cache
+    if cfg.family == "ssm":
+        h = L.apply_norm(pc["ln_m"], x, cfg)
+        st = cache["mlstm"] if cache is not None else None
+        out, new_m = S.mlstm_apply(pc["mlstm"], h, cfg, state=st, decode=decode)
+        x = x + out
+        h = L.apply_norm(pc["ln_s"], x, cfg)
+        st = cache["slstm"] if cache is not None else None
+        out, new_s = S.slstm_apply(pc["slstm"], h, cfg, state=st, decode=decode)
+        x = x + out
+        new_cache = {"mlstm": new_m, "slstm": new_s} if cache is not None else None
+        return x, new_cache
+    raise ValueError(cfg.family)
+
+
+def _run_cycles(params, x, cfg, positions, state, kv_src, decode):
+    """Scan (or unroll) all cycles; returns (x, new_state)."""
+    blocks = params["blocks"]
+    shared = params.get("shared_attn")
+    caches = state.caches if state is not None else None
+    index = state.index if state is not None else None
+
+    if cfg.scan_layers:
+
+        def body(carry, xs):
+            xc = carry
+            pc, cache_c = xs
+            y, new_c = _cycle_apply(pc, xc, cfg, positions, cache_c, index, shared, kv_src, decode)
+            return y, new_c
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, new_caches = jax.lax.scan(body_fn, x, (blocks, caches))
+        new_state = (
+            None if state is None else StepState(caches=new_caches, index=index + x.shape[1])
+        )
+        return x, new_state
+
+    nc = _num_cycles(cfg)
+    new_list = []
+    for i in range(nc):
+        pc = jax.tree.map(lambda a: a[i], blocks)
+        cache_c = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+        x, new_c = _cycle_apply(pc, x, cfg, positions, cache_c, index, shared, kv_src, decode)
+        new_list.append(new_c)
+    new_state = None
+    if state is not None:
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+        new_state = StepState(caches=new_caches, index=index + x.shape[1])
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def hidden_forward(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    img_embed: Optional[jnp.ndarray] = None,
+    enc_embed: Optional[jnp.ndarray] = None,
+    state: Optional[StepState] = None,
+    decode: bool = False,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[StepState]]:
+    """Backbone only: returns (final-norm hidden (B,S,d), new_state).
+    Callers choose how to project to logits (full / last-position /
+    chunked-loss) — materializing (B,S,V) f32 logits for a 1M-token step
+    is the single largest avoidable memory term."""
+    B, S_len = tokens.shape
+    if positions is None:
+        base = state.index if (state is not None and decode) else 0
+        positions = base + jnp.arange(S_len, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = L.embed_apply(params["embed"], tokens, cfg, positions=positions)
+
+    kv_src = None
+    if cfg.family == "vlm" and img_embed is not None:
+        kv_src = (img_embed.astype(cfg.cdtype) @ params["img_proj"].astype(cfg.cdtype))
+    if cfg.family == "encdec":
+        if enc_embed is not None:
+            enc = enc_embed.astype(cfg.cdtype)
+            epos = params["enc_pos"][: enc.shape[1]].astype(cfg.cdtype)
+            enc = enc + epos[None]
+            for i in range(cfg.encoder_layers):
+                pl = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+                enc, _, _ = _apply_dense_layer(
+                    pl, enc, cfg, positions=None, cache=None, cache_index=None, causal=False
+                )
+            kv_src = L.apply_norm(params["enc_ln"], enc, cfg)
+        x2, new_state = _run_decoder_encdec(params, x, cfg, positions, state, kv_src, decode)
+    else:
+        x2, new_state = _run_cycles(params, x, cfg, positions, state, kv_src, decode)
+    x2 = L.apply_norm(params["final_ln"], x2, cfg)
+    return x2, new_state
+
+
+def forward(params, tokens, cfg, **kw):
+    """Full logits (B,S,V_pad) — tests/small models; large-scale paths use
+    hidden_forward + last_logits / chunked_lm_loss."""
+    hidden, new_state = hidden_forward(params, tokens, cfg, **kw)
+    return L.logits_apply(params["embed"], hidden, cfg), new_state
+
+
+def last_logits(params, hidden, cfg):
+    """Logits of the final position only (prefill)."""
+    return L.logits_apply(params["embed"], hidden[:, -1:], cfg)[:, 0]
+
+
+def chunked_lm_loss(
+    params: Params,
+    hidden: jnp.ndarray,
+    labels: jnp.ndarray,
+    cfg: ModelConfig,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Cross entropy without materializing (B,S,V): scan over sequence
+    chunks, rematerializing each chunk's logits in the backward pass."""
+    B, S_len, d = hidden.shape
+    c = min(chunk, S_len)
+    pad = (-S_len) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nchunks = (S_len + pad) // c
+    hc = hidden.reshape(B, nchunks, c, d).swapaxes(0, 1)  # (n, B, c, d)
+    lc = labels.reshape(B, nchunks, c).swapaxes(0, 1)
+    hc = shd.logical(hc, None, "batch", None, "embed_act")
+    lc = shd.logical(lc, None, "batch", None)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        logits = L.logits_apply(params["embed"], h, cfg)
+        V_pad = logits.shape[-1]
+        if V_pad > cfg.vocab_size:
+            pad_mask = jnp.arange(V_pad) >= cfg.vocab_size
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        valid = lab >= 0
+        safe = jnp.maximum(lab, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (tot + (nll * valid).sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1)
+
+
+def _run_decoder_encdec(params, x, cfg, positions, state, kv_src, decode):
+    blocks = params["dec_blocks"]
+    caches = state.caches if state is not None else None
+    index = state.index if state is not None else None
+
+    def one(pc, xc, cache_c):
+        kv = cache_c["self"] if cache_c is not None else None
+        y, new_kv, new_cross = _apply_dense_layer(
+            pc,
+            xc,
+            cfg,
+            positions,
+            kv,
+            index,
+            cross_src=kv_src,
+            cross_cache=cache_c["cross"] if cache_c is not None else None,
+            decode=decode,
+        )
+        new_c = None
+        if cache_c is not None:
+            new_c = {
+                "self": new_kv,
+                "cross": new_cross if new_cross is not None else cache_c["cross"],
+            }
+        return y, new_c
+
+    if cfg.scan_layers:
+
+        def body(carry, xs):
+            pc, cache_c = xs
+            y, new_c = one(pc, carry, cache_c)
+            return y, new_c
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, new_caches = jax.lax.scan(body_fn, x, (blocks, caches))
+        new_state = None if state is None else StepState(new_caches, index + x.shape[1])
+        return x, new_state
+    new_list = []
+    for i in range(cfg.num_layers):
+        pc = jax.tree.map(lambda a: a[i], blocks)
+        cache_c = None if caches is None else jax.tree.map(lambda a: a[i], caches)
+        x, new_c = one(pc, x, cache_c)
+        new_list.append(new_c)
+    new_state = None
+    if state is not None:
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+        new_state = StepState(new_caches, index + x.shape[1])
+    return x, new_state
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    """Next-token cross entropy; positions with label < 0 are masked;
+    padded-vocab logits are excluded from the softmax."""
+    V_pad = logits.shape[-1]
+    if V_pad > vocab_size:
+        pad_mask = jnp.arange(V_pad) >= vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1)

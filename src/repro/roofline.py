@@ -1,0 +1,184 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = collective_bytes / (chips * 50e9)
+
+``cost_analysis()`` reports per-device FLOPs/bytes of the SPMD module —
+but XLA counts every loop body ONCE, so a scanned-layers module
+undercounts by ~num_layers. The dry-run therefore compiles two UNROLLED
+probe modules with small layer counts (L_a < L_b) and extrapolates
+linearly:
+
+  per_layer = (cost(L_b) - cost(L_a)) / (L_b - L_a)
+  total(L)  = cost(L_a) + per_layer * (L - L_a)
+
+Collective bytes are not in cost_analysis at all: we parse the SPMD HLO
+text and sum the result-shape bytes of all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute ops (same probe
+extrapolation). The full-depth scanned module is compiled separately to
+prove the mesh fits memory (memory_analysis with true parameter sizes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g. "  %x = bf16[128,4096]{1,0} all-reduce(...)" and tuple results
+_INSTR_RE = re.compile(
+    r"=\s*((?:\(?\s*(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*,?\s*)+\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind result bytes summed over the module (per-device:
+    the HLO is the SPMD-partitioned per-device program). '-done' ops are
+    skipped so async start/done pairs count once."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        total = sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes))
+        out[kind] += total
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class CellCost:
+    """Raw per-device costs of one compiled module."""
+
+    flops: float
+    bytes_accessed: float
+    collective: Dict[str, float]
+    num_layers: int
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float  # global
+    bytes_accessed: float  # global
+    collective_bytes: float  # global
+    model_flops: float  # 6*N_active*tokens (analytic)
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+    memory_fit: Optional[str] = None
+    collective_detail: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.chips * self.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * self.ici_bw)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at
+        the max of the three terms: useful_compute_time / step_time."""
+        t_model = self.model_flops / (self.chips * self.peak_flops)
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / max(t_step, 1e-30)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_detail": self.collective_detail,
+            "memory_fit": self.memory_fit,
+        }
+
+
+def extrapolate(c_a: CellCost, c_b: CellCost, num_layers: int) -> CellCost:
+    dl = c_b.num_layers - c_a.num_layers
+    assert dl > 0
+
+    def lin(a, b):
+        per = (b - a) / dl
+        return a + per * (num_layers - c_a.num_layers)
+
+    coll = {
+        k: lin(c_a.collective.get(k, 0.0), c_b.collective.get(k, 0.0))
+        for k in set(c_a.collective) | set(c_b.collective)
+    }
+    return CellCost(
+        flops=lin(c_a.flops, c_b.flops),
+        bytes_accessed=lin(c_a.bytes_accessed, c_b.bytes_accessed),
+        collective=coll,
+        num_layers=num_layers,
+    )

@@ -1,0 +1,122 @@
+"""Batched serving driver: prefill + decode with continuous batching.
+
+A minimal but real serving loop: requests (prompt token arrays) are
+admitted into a fixed set of batch slots; every engine tick decodes one
+token for all active slots; finished slots (EOS or max tokens) are
+refilled by prefilling pending requests. Slot state lives in ONE
+StepState whose batch dim is the slot count — prefill writes a single
+slot's cache via dynamic_update along the batch axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.state = T.init_cache(cfg, slots, max_len)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pending: Deque[Request] = deque()
+        self.slot_pos = np.zeros(slots, dtype=np.int64)
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self.last_tok = np.zeros((slots, 1), dtype=np.int32)
+
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.pending.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.pending:
+                req = self.pending.popleft()
+                # prefill a single-sequence batch, then splice into slot s
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                logits, st1 = self._prefill(self.params, batch)
+                tok = int(jnp.argmax(logits[0]))
+                req.out.append(tok)
+                req.t_first = time.time()
+                self.last_tok[s, 0] = tok
+                self.slot_pos[s] = len(req.prompt)
+                self.state = _splice_slot(self.state, st1, s)
+                self.active[s] = req
+
+    def tick(self) -> int:
+        """One engine step: admit + decode all active slots. Returns the
+        number of active slots."""
+        self._admit()
+        if not any(a is not None for a in self.active):
+            return 0
+        logits, nxt, self.state = self._decode(
+            self.params, self.state, jnp.asarray(self.last_tok)
+        )
+        nxt = np.asarray(nxt)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.last_tok[s, 0] = tok
+            done = len(req.out) >= req.max_new or (
+                req.eos_id is not None and tok == req.eos_id
+            )
+            if done:
+                req.t_done = time.time()
+                self.active[s] = None
+        return sum(a is not None for a in self.active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            before = [a for a in self.active if a is not None]
+            n = self.tick()
+            for r in before:
+                if r not in self.active and r.t_done:
+                    finished.append(r)
+            if n == 0 and not self.pending:
+                break
+        return finished
+
+
+def _splice_slot(state: T.StepState, single: T.StepState, slot: int) -> T.StepState:
+    """Write a 1-batch prefill state into batch position `slot`.
+
+    Cache leaves carry the batch dim at axis 1 (axis 0 is the stacked
+    cycle dim); mamba conv/ssm and lstm states likewise."""
+
+    def splice(dst, src):
+        if dst.ndim < 2:
+            return dst
+        return jax.lax.dynamic_update_slice_in_dim(dst, src.astype(dst.dtype), slot, axis=1)
+
+    caches = jax.tree.map(splice, state.caches, single.caches)
+    # decode positions are per-slot; keep the max index (positions are
+    # passed per-token at decode via state.index of the *engine* state).
+    return T.StepState(caches=caches, index=jnp.maximum(state.index, single.index))

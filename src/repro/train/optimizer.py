@@ -1,0 +1,138 @@
+"""Optimizers: AdamW (with FSDP/ZeRO-style sharded moments) and Adafactor
+(factored second moment — the memory-fit choice for the 235B/400B MoEs).
+
+Moment tensors reuse the parameter sharding tree, so when params are
+FSDP-sharded over 'data' x TP over 'model' the optimizer state is too —
+that IS ZeRO: no device holds a full copy of any state tensor.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any  # first moment (None for adafactor)
+    v: Any  # second moment (full, or (row, col) factored)
+
+
+class OptConfig(NamedTuple):
+    kind: str = "adamw"  # adamw | adafactor
+    lr_peak: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def lr_schedule(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to 10% of peak."""
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr_peak * warm * (0.1 + 0.9 * cos)
+
+
+def _factored_shape(shape):
+    """Adafactor factors the last two dims when both >= 2."""
+    if len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2:
+        return shape[:-1], shape[:-2] + shape[-1:]
+    return None
+
+
+def init_opt_state(params, oc: OptConfig) -> OptState:
+    mdt = jnp.dtype(oc.moment_dtype)
+    if oc.kind == "adamw":
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+        v = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+        return OptState(jnp.zeros((), jnp.int32), m, v)
+    if oc.kind == "adafactor":
+
+        def make_v(p):
+            fs = _factored_shape(p.shape)
+            if fs is None:
+                return jnp.zeros(p.shape, mdt)
+            return (jnp.zeros(fs[0], mdt), jnp.zeros(fs[1], mdt))
+
+        v = jax.tree.map(make_v, params)
+        return OptState(jnp.zeros((), jnp.int32), None, v)
+    raise ValueError(oc.kind)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state: OptState, oc: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_schedule(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = [
+        g.astype(jnp.float32) * scale for g in treedef.flatten_up_to(grads)
+    ]
+
+    if oc.kind == "adamw":
+        b1c = 1 - oc.b1 ** step.astype(jnp.float32)
+        b2c = 1 - oc.b2 ** step.astype(jnp.float32)
+        leaves_m = treedef.flatten_up_to(state.m)
+        leaves_v = treedef.flatten_up_to(state.v)
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v):
+            m2 = oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * g
+            v2 = oc.b2 * v.astype(jnp.float32) + (1 - oc.b2) * g * g
+            delta = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + oc.eps)
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+            new_p.append((p.astype(jnp.float32) - lr * delta).astype(p.dtype))
+            new_m.append(m2.astype(m.dtype))
+            new_v.append(v2.astype(v.dtype))
+        return (
+            jax.tree.unflatten(treedef, new_p),
+            OptState(step, jax.tree.unflatten(treedef, new_m), jax.tree.unflatten(treedef, new_v)),
+            {"lr": lr, "grad_norm": gnorm},
+        )
+
+    if oc.kind == "adafactor":
+        d = 1e-30
+        leaves_v = treedef.flatten_up_to(state.v)
+        new_p, new_v = [], []
+        for p, g, v in zip(leaves_p, leaves_g, leaves_v):
+            fs = _factored_shape(p.shape)
+            g2 = g * g + d
+            if fs is None:
+                v2 = oc.b2 * v + (1 - oc.b2) * g2
+                precond = g / (jnp.sqrt(v2) + oc.eps)
+            else:
+                vr, vc = v
+                vr2 = oc.b2 * vr + (1 - oc.b2) * g2.mean(-1)
+                vc2 = oc.b2 * vc + (1 - oc.b2) * g2.mean(-2)
+                rfac = vr2 / jnp.maximum(vr2.mean(-1, keepdims=True), d)
+                precond = g / (jnp.sqrt(rfac[..., None] * vc2[..., None, :]) + oc.eps)
+                v2 = (vr2, vc2)
+            p2 = p.astype(jnp.float32) - lr * (
+                precond + oc.weight_decay * p.astype(jnp.float32)
+            )
+            new_p.append(p2.astype(p.dtype))
+            new_v.append(v2)
+        return (
+            jax.tree.unflatten(treedef, new_p),
+            OptState(step, None, jax.tree.unflatten(treedef, new_v)),
+            {"lr": lr, "grad_norm": gnorm},
+        )
+
+    raise ValueError(oc.kind)

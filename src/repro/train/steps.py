@@ -1,0 +1,176 @@
+"""Step builders: train_step / prefill_step / decode_step per config, and
+the ShapeDtypeStruct ``input_specs`` the dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeSpec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptConfig, OptState, apply_updates, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def default_opt_config(cfg: ModelConfig, total_steps: int = 10_000) -> OptConfig:
+    # factored moments for the very large MoEs: AdamW moments alone would
+    # be 2x4 bytes/param — past HBM at 235B/400B on 256 chips.
+    if cfg.num_experts and cfg.num_layers * cfg.d_model >= 94 * 4096:
+        return OptConfig(kind="adafactor", total_steps=total_steps)
+    return OptConfig(kind="adamw", total_steps=total_steps)
+
+
+# ---------------------------------------------------------------------------
+# batch construction
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one step as ShapeDtypeStructs (dry-run stand-ins).
+
+    Modality frontends are stubs per the assignment: the VLM receives
+    pre-computed patch embeddings, whisper receives frame embeddings.
+    """
+    B = shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        d: Dict[str, jax.ShapeDtypeStruct] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        d = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        fd = cfg.frontend_dim or cfg.d_model
+        d["img_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, fd), jnp.dtype(cfg.compute_dtype)
+        )
+    if cfg.family == "encdec" and shape.kind != "decode":
+        d["enc_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+    return d
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch matching batch_struct (smoke tests/examples)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, sds in batch_struct(cfg, shape).items():
+        key, k = jax.random.split(key)
+        if sds.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sds.shape, 0, cfg.vocab_size)
+        else:
+            out[name] = (jax.random.normal(k, sds.shape, jnp.float32) * 0.02).astype(sds.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    cfg: ModelConfig, oc: Optional[OptConfig] = None, accum_steps: int = 1
+):
+    """accum_steps > 1 splits the global batch into microbatches scanned
+    sequentially with gradient accumulation — the activation working set
+    shrinks by the same factor while numerics stay identical (sum of
+    per-microbatch grads). This is also the elastic-scaling lever: a
+    shrunken mesh keeps the global batch by raising accum_steps
+    (ft.resilience.ElasticPlan)."""
+    oc = oc or default_opt_config(cfg)
+
+    def loss_fn(params, batch):
+        hidden, _ = T.hidden_forward(
+            params,
+            batch["tokens"],
+            cfg,
+            img_embed=batch.get("img_embed"),
+            enc_embed=batch.get("enc_embed"),
+        )
+        return T.chunked_lm_loss(params, hidden, batch["labels"], cfg, chunk=cfg.loss_chunk)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % accum_steps == 0, (B, accum_steps)
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, B // accum_steps) + x.shape[1:]),
+                batch,
+            )
+
+            def acc(carry, mb):
+                tot, g = carry
+                l, gi = jax.value_and_grad(loss_fn)(state.params, mb)
+                return (tot + l, jax.tree.map(jnp.add, g, gi)), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss_sum, grads), _ = jax.lax.scan(acc, (jnp.zeros(()), g0), micro)
+            loss = loss_sum / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        new_params, new_opt, metrics = apply_updates(state.params, grads, state.opt, oc)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_init_fn(cfg: ModelConfig, oc: Optional[OptConfig] = None):
+    oc = oc or default_opt_config(cfg)
+
+    def init_fn(key) -> TrainState:
+        from repro.models.params import unbox
+
+        boxed = T.init_params(key, cfg)
+        params, _ = unbox(boxed)
+        return TrainState(params, init_opt_state(params, oc))
+
+    return init_fn
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        B = batch["tokens"].shape[0]
+        state = T.init_cache(cfg, B, max_len)
+        hidden, new_state = T.hidden_forward(
+            params,
+            batch["tokens"],
+            cfg,
+            img_embed=batch.get("img_embed"),
+            enc_embed=batch.get("enc_embed"),
+            state=state,
+            decode=False,
+        )
+        return T.last_logits(params, hidden, cfg), new_state
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state: T.StepState, tokens):
+        logits, new_state = T.forward(params, tokens, cfg, state=state, decode=True)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return logits[:, -1], next_tok, new_state
+
+    return decode_step
+
+
+def serve_state_struct(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs of a decode-time StepState with a cache of depth
+    shape.seq_len (the dry-run's KV/state stand-in)."""
+    B = shape.global_batch
+    return jax.eval_shape(lambda: T.init_cache(cfg, B, shape.seq_len))

@@ -1,0 +1,220 @@
+"""Per-kernel allclose tests: shape/dtype sweeps vs. ref.py oracles.
+
+All Pallas kernels run in interpret mode (CPU container); the same call
+sites compile Mosaic kernels on a TPU backend.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.plan import CobraPlan
+from repro.kernels import ops, ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [17, 256, 5000])
+@pytest.mark.parametrize("num_bins", [2, 64, 257])
+@pytest.mark.parametrize("block", [64, 1024])
+def test_histogram_matches_ref(m, num_bins, block):
+    keys = jnp.asarray(_rng(m + num_bins).integers(0, num_bins, m), jnp.int32)
+    got = ops.histogram(keys, num_bins, block=block)
+    want = ref.histogram_ref(keys, num_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_histogram_ignores_out_of_range_padding():
+    keys = jnp.asarray([0, 1, 5, 5, 9, 9, 9], jnp.int32)
+    got = ops.histogram(keys, 6, block=4)  # 9 is out of range
+    np.testing.assert_array_equal(np.asarray(got), [1, 1, 0, 0, 0, 2])
+
+
+# ---------------------------------------------------------------------------
+# counting positions (software-PB binning kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,num_bins,block", [(100, 8, 32), (5000, 64, 512), (777, 13, 256)])
+def test_counting_positions_matches_ref(m, num_bins, block):
+    keys = jnp.asarray(_rng(m).integers(0, num_bins, m), jnp.int32)
+    counts = ref.histogram_ref(keys, num_bins)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)])[:-1]
+    from repro.kernels.binning import counting_positions_pallas
+
+    got = counting_positions_pallas(keys, starts, num_bins=num_bins, block=block)
+    want = ref.counting_positions_ref(keys, starts, num_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_positions_form_permutation():
+    m, num_bins = 2048, 32
+    keys = jnp.asarray(_rng(3).integers(0, num_bins, m), jnp.int32)
+    counts = ref.histogram_ref(keys, num_bins)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)])[:-1]
+    from repro.kernels.binning import counting_positions_pallas
+
+    pos = counting_positions_pallas(keys, starts, num_bins=num_bins, block=256)
+    assert sorted(np.asarray(pos).tolist()) == list(range(m))
+
+
+# ---------------------------------------------------------------------------
+# COBRA C-Buffer binning pass
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,n,bin_range,block,cap",
+    [
+        (1000, 256, 32, 128, 128),
+        (5000, 1000, 64, 256, 512),  # cap > block: fewer evictions
+        (640, 64, 8, 64, 64),  # adversarial: tiny buffers, many evictions
+    ],
+)
+def test_cobra_pass_matches_stable_sort(m, n, bin_range, block, cap):
+    r = _rng(m * 7 + n)
+    idx = jnp.asarray(r.integers(0, n, m), jnp.int32)
+    val = jnp.asarray(r.integers(0, 1 << 20, m), jnp.int32)
+    nb = -(-n // bin_range)
+    bins = ops.cobra_binning_pass(
+        idx, val, bin_range=bin_range, num_bins=nb, block=block, cap=cap
+    )
+    want_i, want_v = ref.binned_stream_ref(
+        (idx // bin_range).astype(jnp.int32), idx, val, nb
+    )
+    np.testing.assert_array_equal(np.asarray(bins.idx), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(bins.val), np.asarray(want_v))
+
+
+def test_cobra_hierarchical_equals_single_fine_pass():
+    r = _rng(42)
+    m, n = 4096, 2048
+    idx = jnp.asarray(r.integers(0, n, m), jnp.int32)
+    val = jnp.asarray(r.integers(0, 999, m), jnp.int32)
+    plan = CobraPlan(num_indices=n, final_bin_range=32, level_fanouts=(8, 8))
+    bins = ops.cobra_binning(idx, val, plan, block=256, cap=256)
+    want_i, want_v = ref.binned_stream_ref(
+        (idx // 32).astype(jnp.int32), idx, val, -(-n // 32)
+    )
+    np.testing.assert_array_equal(np.asarray(bins.idx), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(bins.val), np.asarray(want_v))
+
+
+def test_cobra_skewed_input_all_one_bin():
+    """Power-law extreme: every tuple lands in bin 0 (forces eviction on
+    every block — the flush path is exercised, correctness must hold)."""
+    m, n, bin_range = 1024, 512, 512
+    r = _rng(9)
+    idx = jnp.asarray(r.integers(0, 16, m), jnp.int32)  # all in bin 0
+    val = jnp.arange(m, dtype=jnp.int32)
+    bins = ops.cobra_binning_pass(
+        idx, val, bin_range=bin_range, num_bins=1, block=128, cap=128
+    )
+    np.testing.assert_array_equal(np.asarray(bins.idx), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(bins.val), np.asarray(val))
+
+
+# ---------------------------------------------------------------------------
+# bin-read MXU scatter-add
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,L,R,d", [(4, 16, 8, 1), (8, 64, 32, 4), (16, 128, 128, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_binread_matches_ref(B, L, R, d, dtype):
+    r = _rng(B * L)
+    idx = np.stack([r.integers(b * R, (b + 1) * R, L) for b in range(B)]).astype(np.int32)
+    idx[:, -3:] = -1  # padding
+    val = r.normal(size=(B, L, d)).astype(np.float32)
+    got = ops.binread_scatter_add(
+        jnp.asarray(idx), jnp.asarray(val, dtype), bin_range=R
+    )
+    want = ref.binread_scatter_add_ref(jnp.asarray(idx), jnp.asarray(val, dtype), R)
+    atol = 1e-5 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_binread_coalesces_duplicates():
+    """Duplicate indices within a bin must accumulate (PHI-style)."""
+    B, L, R, d = 1, 8, 4, 2
+    idx = jnp.asarray([[1, 1, 1, 2, 2, 3, -1, -1]], jnp.int32)
+    val = jnp.ones((B, L, d), jnp.float32)
+    out = ops.binread_scatter_add(idx, val, bin_range=R)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), [0.0, 3.0, 2.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# row scatter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,d,block", [(64, 8, 32), (1000, 16, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_scatter_rows_matches_ref(m, d, block, dtype):
+    r = _rng(m * d)
+    x = jnp.asarray(r.integers(-100, 100, (m, d)), dtype)
+    pos = jnp.asarray(r.permutation(m), jnp.int32)
+    got = ops.scatter_rows(x, pos, m, block=block)
+    want = ref.scatter_rows_ref(x, pos, m)
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(want, np.float32)
+    )
+
+
+def test_scatter_rows_drops_negative_positions():
+    x = jnp.ones((4, 2), jnp.float32)
+    pos = jnp.asarray([0, -1, 2, -1], jnp.int32)
+    got = ops.scatter_rows(x, pos, 4, block=4)
+    np.testing.assert_array_equal(np.asarray(got).sum(axis=1), [2.0, 0.0, 2.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end kernel pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,d,bin_range", [(2000, 512, 8, 64), (4096, 4096, 4, 256)])
+def test_pb_scatter_add_full_pipeline(m, n, d, bin_range):
+    r = _rng(m + n)
+    idx = jnp.asarray(r.integers(0, n, m), jnp.int32)
+    upd = jnp.asarray(r.normal(size=(m, d)), jnp.float32)
+    got = ops.pb_scatter_add_full(idx, upd, n, bin_range=bin_range, block=512)
+    want = jnp.zeros((n, d)).at[idx].add(upd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (beyond-paper §Perf kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KH,S,hd", [(1, 2, 1, 128, 16), (2, 4, 2, 256, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_direct(B, H, KH, S, hd, causal, dtype):
+    import jax
+
+    from repro.kernels.flashattn import flash_attention_pallas
+    import repro.models.layers as L
+
+    key = jax.random.PRNGKey(B * S + H)
+    q = jax.random.normal(key, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, hd), dtype)
+    want = L._direct_attention(q, k, v, causal=causal).reshape(B, S, H, hd)
+    got = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, q_block=64, kv_block=64,
+    ).transpose(0, 2, 1, 3)
+    atol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )

@@ -1,0 +1,165 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import COO, CobraPlan
+from repro.core import pb as pb_core
+from repro.core.cobra import hierarchical_binning
+from repro.core.neighbor_populate import build_csr_oracle, build_csr_pb
+from repro.core.scatter import pb_scatter_add, scatter_add_baseline
+from repro.kernels import ops, ref
+
+
+SET = settings(max_examples=25, deadline=None)
+
+
+indices_strategy = st.lists(st.integers(0, 199), min_size=1, max_size=300)
+
+
+@SET
+@given(idx=indices_strategy, bin_range=st.sampled_from([1, 7, 32, 200]))
+def test_binning_is_stable_permutation(idx, bin_range):
+    """Binning outputs a permutation of the input, sorted by bin id, and
+    stable within each bin — the invariant that makes non-commutative PB
+    correct (paper §2)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    val = jnp.arange(idx.shape[0], dtype=jnp.int32)  # original positions
+    nb = -(-200 // bin_range)
+    bins = pb_core.binning_sort(idx, val, bin_range, nb)
+    got_idx = np.asarray(bins.idx)
+    got_val = np.asarray(bins.val)
+    # permutation: same multiset
+    assert sorted(got_idx.tolist()) == sorted(np.asarray(idx).tolist())
+    # sorted by bin id
+    bids = got_idx // bin_range
+    assert (np.diff(bids) >= 0).all()
+    # stability: original positions increase within each bin
+    for b in np.unique(bids):
+        sel = got_val[bids == b]
+        assert (np.diff(sel) > 0).all()
+    # starts consistent with histogram
+    counts = np.bincount(np.asarray(idx) // bin_range, minlength=nb)
+    assert np.array_equal(np.diff(np.asarray(bins.starts)), counts)
+
+
+@SET
+@given(
+    idx=indices_strategy,
+    fanouts=st.sampled_from([(4,), (2, 4), (4, 4, 4)]),
+)
+def test_hierarchical_equals_flat_binning(idx, fanouts):
+    """COBRA's multi-pass composition == a single stable fine partition."""
+    idx = jnp.asarray(idx, jnp.int32)
+    val = jnp.arange(idx.shape[0], dtype=jnp.int32)
+    n = 200
+    total = 1
+    for f in fanouts:
+        total *= f
+    final_range = max(1, -(-n // total))
+    plan = CobraPlan(num_indices=n, final_bin_range=final_range, level_fanouts=tuple(fanouts))
+    got = hierarchical_binning(idx, val, plan, method="sort")
+    nb = -(-n // final_range)
+    want_i, want_v = ref.binned_stream_ref(
+        (idx // final_range).astype(jnp.int32), idx, val, nb
+    )
+    np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got.val), np.asarray(want_v))
+
+
+@SET
+@given(
+    edges=st.lists(
+        st.tuples(st.integers(0, 31), st.integers(0, 31)), min_size=1, max_size=200
+    ),
+    bin_range=st.sampled_from([1, 4, 32]),
+)
+def test_el_to_csr_invariant_under_any_bin_range(edges, bin_range):
+    """EL->CSR output is independent of the bin range AND exactly matches
+    the sequential Algorithm 1 oracle (stability preserves EL order)."""
+    src = jnp.asarray([e[0] for e in edges], jnp.int32)
+    dst = jnp.asarray([e[1] for e in edges], jnp.int32)
+    g = COO(src, dst, 32)
+    oracle = build_csr_oracle(g)
+    got = build_csr_pb(g, bin_range)
+    np.testing.assert_array_equal(np.asarray(got.offsets), np.asarray(oracle.offsets))
+    np.testing.assert_array_equal(np.asarray(got.neighs), np.asarray(oracle.neighs))
+
+
+@SET
+@given(
+    idx=st.lists(st.integers(0, 63), min_size=1, max_size=200),
+    seed=st.integers(0, 1000),
+)
+def test_pb_scatter_add_equals_baseline(idx, seed):
+    idx = jnp.asarray(idx, jnp.int32)
+    upd = jnp.asarray(
+        np.random.default_rng(seed).normal(size=(idx.shape[0], 4)), jnp.float32
+    )
+    a = scatter_add_baseline(idx, upd, 64)
+    b = pb_scatter_add(idx, upd, 64, coalesce=True)
+    c = pb_scatter_add(idx, upd, 64, coalesce=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+@SET
+@given(
+    keys=st.lists(st.integers(0, 15), min_size=1, max_size=200),
+    block=st.sampled_from([32, 64]),
+)
+def test_histogram_kernel_property(keys, block):
+    keys = jnp.asarray(keys, jnp.int32)
+    got = ops.histogram(keys, 16, block=block)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.bincount(np.asarray(keys), minlength=16)
+    )
+
+
+@SET
+@given(
+    keys=st.lists(st.integers(0, 7), min_size=1, max_size=150),
+    cap=st.sampled_from([64, 128]),
+)
+def test_cobra_kernel_property(keys, cap):
+    """C-Buffer kernel == stable sort for arbitrary key streams (evictions
+    at any fill pattern must preserve order)."""
+    idx = jnp.asarray(keys, jnp.int32) * 8  # bin = idx//8 = original key
+    val = jnp.arange(idx.shape[0], dtype=jnp.int32)
+    bins = ops.cobra_binning_pass(
+        idx, val, bin_range=8, num_bins=8, block=64, cap=cap
+    )
+    want_i, want_v = ref.binned_stream_ref(
+        (idx // 8).astype(jnp.int32), idx, val, 8
+    )
+    np.testing.assert_array_equal(np.asarray(bins.idx), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(bins.val), np.asarray(want_v))
+
+
+@SET
+@given(
+    n_tok=st.integers(1, 40),
+    top_k=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+def test_moe_dispatch_conservation(n_tok, top_k, seed):
+    """With ample capacity, PB dispatch output == dense oracle for any
+    token count / top_k (no token lost or double-counted)."""
+    import dataclasses
+
+    import repro.models.layers as L
+    from repro.models.config import ModelConfig
+    from repro.models.params import unbox
+
+    cfg = ModelConfig(
+        name="p", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=4, top_k=top_k,
+        capacity_factor=float(4 * top_k), param_dtype="float32",
+        compute_dtype="float32",
+    )
+    p, _ = unbox(L.init_moe(jax.random.PRNGKey(seed), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, n_tok, 16))
+    y_pb = L.moe_apply(p, x, cfg)
+    y_dense = L.moe_apply(p, x, dataclasses.replace(cfg, moe_dispatch="dense"))
+    np.testing.assert_allclose(np.asarray(y_pb), np.asarray(y_dense), atol=2e-4)
