@@ -1,0 +1,19 @@
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test bench bench-smoke docs-check verify
+
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
+
+docs-check:
+	$(PY) scripts/docs_check.py
+
+verify:
+	bash scripts/verify.sh

@@ -22,8 +22,15 @@ PAPER_N = 32_000_000
 PAPER_M = 4 * PAPER_N
 
 
-def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
-    """Median wall-clock seconds of fn(*args) with block_until_ready."""
+def time_fn(fn: Callable, *args, reps: int | None = None, warmup: int | None = None) -> float:
+    """Median wall-clock seconds of fn(*args) with block_until_ready.
+
+    REPRO_BENCH_REPS / REPRO_BENCH_WARMUP override the defaults (5/2);
+    ``benchmarks/run.py --smoke`` sets them to 1/1 for a fast CI pass."""
+    if reps is None:
+        reps = int(os.environ.get("REPRO_BENCH_REPS", "5"))
+    if warmup is None:
+        warmup = int(os.environ.get("REPRO_BENCH_WARMUP", "2"))
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)

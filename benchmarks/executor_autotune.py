@@ -1,0 +1,59 @@
+"""Executor autotuning quality: analytic plan vs. measured selection.
+
+For a sweep of (num_indices, stream_len) shapes this bench records, per
+shape: the analytic decision (DESIGN.md §3.1 tree at the hardware
+model's optima), the measured-best method, every candidate's timing, and
+the regret of trusting the model alone (analytic time / best time).
+A regret of 1.0 means the plan-driven choice was already optimal — the
+paper's §4 claim that hardware-derived plans remove the tuning knob;
+larger values are exactly what the autotune cache then repairs.
+
+Rows: ``executor/autotune/n<N>_m<M>,best_us,analytic=<m> best=<m>
+regret=<r>x timings=<...>``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks.common import SCALE, Rows
+from repro.core import PBExecutor
+
+
+SHAPES_SMALL = [
+    (1 << 10, 1 << 12),
+    (1 << 12, 1 << 14),
+    (1 << 14, 1 << 16),
+    (1 << 16, 1 << 17),
+]
+SHAPES_FULL = SHAPES_SMALL + [
+    (1 << 18, 1 << 19),
+    (1 << 20, 1 << 21),
+]
+
+
+def run() -> Rows:
+    rows = Rows()
+    shapes = SHAPES_FULL if SCALE == "full" else SHAPES_SMALL
+    # fresh cache dir: measure, don't reuse a previous run's choices
+    cache_dir = os.path.join(tempfile.mkdtemp(prefix="repro_pb_bench_"), "cache")
+    ex = PBExecutor(autotune=True, cache_dir=cache_dir)
+    for n, m in shapes:
+        analytic = ex.analytic_method(n, m)
+        entry = ex.measure_methods(n, m)
+        timings = entry["timings_us"]
+        best = entry["method"]
+        best_us = timings.get(best, 0.0)
+        regret = timings.get(analytic, best_us) / best_us if best_us else 1.0
+        detail = " ".join(f"{k}={v:.0f}us" for k, v in sorted(timings.items()))
+        rows.add(
+            f"executor/autotune/n{n}_m{m}",
+            best_us,
+            f"analytic={analytic} best={best} regret={regret:.2f}x {detail}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run().emit():
+        print(r)

@@ -2,9 +2,12 @@
 integration benches. Prints ``name,us_per_call,derived`` CSV.
 
 BENCH_SCALE=small (default, CI-sized) | full (EXPERIMENTS.md numbers).
+``--smoke`` runs a fast subset (1 rep, 1 warmup, small scale) — the
+benchmark leg of scripts/verify.sh.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -18,13 +21,29 @@ MODULES = [
     "benchmarks.fig6_breakdown",
     "benchmarks.moe_dispatch",
     "benchmarks.embed_grad",
+    "benchmarks.executor_autotune",
+]
+
+# Fast, representative subset: one paper table, the executor's own
+# selection bench, and one framework-integration stream.
+SMOKE_MODULES = [
+    "benchmarks.table1_pb_speedup",
+    "benchmarks.executor_autotune",
+    "benchmarks.moe_dispatch",
 ]
 
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
+    modules = MODULES
+    if smoke:
+        os.environ["BENCH_SCALE"] = "small"
+        os.environ.setdefault("REPRO_BENCH_REPS", "1")
+        os.environ.setdefault("REPRO_BENCH_WARMUP", "1")
+        modules = SMOKE_MODULES
     print("name,us_per_call,derived")
     failures = 0
-    for modname in MODULES:
+    for modname in modules:
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["run"])

@@ -18,6 +18,7 @@ from benchmarks.common import PAPER_M, PAPER_N, Rows, graph_scale, time_fn
 from repro.core import (
     build_csr_baseline,
     build_csr_pb,
+    get_default_executor,
     graph_suite,
     pagerank_coo_scatter,
 )
@@ -38,17 +39,21 @@ def run() -> Rows:
     # Table 1 PR row compares against GAP's CSR execution (pull)
     mod_sc_pr = traffic.pr_pull_iter_seconds(PAPER_M, PAPER_N, hw) * iters
     mod_pb_pr = traffic.pr_pb_iter_seconds(PAPER_M, PAPER_N, br_paper, hw) * iters
+    ex = get_default_executor()
     for name, g in suite.items():
         n = g.num_nodes
         br = min(max(64, compromise_bin_range(n, hw)), n)
+        # executor decision for this stream shape: method-selection
+        # quality becomes part of the recorded perf trajectory
+        dec = ex.decide(n, g.num_edges, bin_range=br)
 
         t_base = time_fn(build_csr_baseline, g)
-        t_pb = time_fn(lambda gg: build_csr_pb(gg, br), g)
+        t_pb = time_fn(lambda gg: build_csr_pb(gg, br, method="auto"), g)
         rows.add(
             f"table1/neighpop/{name}",
             t_pb * 1e6,
             f"measured_speedup={t_base/t_pb:.2f}x modeled_xeon={mod_base/mod_pb:.2f}x "
-            f"(paper: 4.5-7.3x)",
+            f"executor={dec.describe()} (paper: 4.5-7.3x)",
         )
 
         t_sc = time_fn(lambda gg: pagerank_coo_scatter(gg, iters=iters).ranks, g)
@@ -62,7 +67,7 @@ def run() -> Rows:
             f"table1/pagerank/{name}",
             t_pr * 1e6,
             f"measured_speedup={t_sc/t_pr:.2f}x modeled_xeon={mod_sc_pr/mod_pb_pr:.2f}x "
-            f"(paper: 0.8-1.3x)",
+            f"executor={dec.describe()} (paper: 0.8-1.3x)",
         )
     return rows
 

@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Fail if any source file cites a doc (or doc section) that does not exist.
+
+Checks two things over src/, tests/, benchmarks/, examples/:
+
+  1. every ``<FILE>.md §N[.M]`` citation points at a repo-root doc that
+     exists AND contains that section marker (``§N`` / ``§N.M``);
+  2. every bare ``DESIGN.md`` / ``README.md`` / ... mention refers to a
+     file that exists.
+
+This is the `make docs-check` target; it exists because the seed repo
+shipped docstrings citing a DESIGN.md that was never written.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+
+SECTION_REF = re.compile(r"([A-Z][A-Z_]*\.md)\s*§\s*([0-9]+(?:\.[0-9]+)?)")
+FILE_REF = re.compile(r"\b([A-Z][A-Z_]*\.md)\b")
+
+
+def doc_sections(path: str) -> set[str]:
+    """All §-markers present in a doc ('2', '3.1', ...). A §N.M citation
+    is satisfied by an explicit §N.M marker; a §N citation by §N."""
+    text = open(path, encoding="utf-8").read()
+    return set(re.findall(r"§\s*([0-9]+(?:\.[0-9]+)?)", text))
+
+
+def main() -> int:
+    errors = []
+    docs_cache: dict[str, set[str] | None] = {}
+    for d in SCAN_DIRS:
+        base = os.path.join(ROOT, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _, files in os.walk(base):
+            for fn in files:
+                if not fn.endswith((".py", ".sh", ".md")):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, ROOT)
+                text = open(path, encoding="utf-8").read()
+                for m in FILE_REF.finditer(text):
+                    doc = m.group(1)
+                    if doc not in docs_cache:
+                        p = os.path.join(ROOT, doc)
+                        docs_cache[doc] = doc_sections(p) if os.path.exists(p) else None
+                    if docs_cache[doc] is None:
+                        errors.append(f"{rel}: cites missing doc {doc}")
+                for m in SECTION_REF.finditer(text):
+                    doc, sec = m.group(1), m.group(2)
+                    sections = docs_cache.get(doc)
+                    if sections and sec not in sections:
+                        errors.append(f"{rel}: cites {doc} §{sec}, not present in {doc}")
+    if errors:
+        print("docs-check FAILED:")
+        for e in sorted(set(errors)):
+            print(f"  {e}")
+        return 1
+    print("docs-check OK: all doc citations resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

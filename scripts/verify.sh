@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + fast benchmark smoke + doc-citation check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke =="
+python -m benchmarks.run --smoke
+
+echo "== docs-check =="
+python scripts/docs_check.py
+
+echo "verify OK"

@@ -1,5 +1,14 @@
 """Core: the paper's contribution (Propagation Blocking + COBRA) in JAX."""
 from repro.core.cobra import cobra_scatter_add, hierarchical_binning
+from repro.core.executor import (
+    BatchedBins,
+    BinningDecision,
+    PBExecutor,
+    dispatch_permutation,
+    execute_binning,
+    get_default_executor,
+    set_default_executor,
+)
 from repro.core.graph import (
     COO,
     CSR,
@@ -22,9 +31,12 @@ from repro.core.scatter import pb_scatter_add, scatter_add_baseline
 __all__ = [
     "COO",
     "CSR",
+    "BatchedBins",
+    "BinningDecision",
     "Bins",
     "CobraPlan",
     "HardwareModel",
+    "PBExecutor",
     "binning",
     "binning_counting",
     "binning_sort",
@@ -35,6 +47,10 @@ __all__ = [
     "cobra_scatter_add",
     "compromise_bin_range",
     "degrees_from_coo",
+    "dispatch_permutation",
+    "execute_binning",
+    "get_default_executor",
+    "set_default_executor",
     "graph_suite",
     "hierarchical_binning",
     "offsets_from_degrees",

@@ -21,7 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import pb
+from repro.core.executor import get_default_executor
 from repro.core.graph import COO
 
 
@@ -57,14 +57,18 @@ def connected_components(coo: COO, max_iters: int = 512) -> CCResult:
 
 
 def connected_components_pb(
-    coo: COO, bin_range: int = 1 << 14, max_iters: int = 512
+    coo: COO, bin_range: int = 1 << 14, max_iters: int = 512,
+    method: str | None = None,
 ) -> CCResult:
-    """PB execution: edges binned by dst range once (pre-processing);
-    per-iteration scatter walks destinations bin-sorted — Bin-Read
-    locality for the label array. min is idempotent, so in-bin duplicate
-    coalescing (PHI-style) needs no correction term."""
-    num_bins = -(-coo.num_nodes // bin_range)
-    bins = pb.binning_sort(coo.dst, coo.src, bin_range, num_bins)
+    """PB execution (paper §2's third update class): edges binned by dst
+    range once through the shared executor (DESIGN.md §3); per-iteration
+    scatter walks destinations bin-sorted — Bin-Read locality for the
+    label array. min is idempotent, so in-bin duplicate coalescing
+    (PHI-style) needs no correction term."""
+    bins = get_default_executor().bin_stream(
+        coo.dst, coo.src, num_indices=coo.num_nodes, bin_range=bin_range,
+        method=method,
+    )
     dst_b, src_b = bins.idx, bins.val
     labels, it = _cc(src_b, dst_b, coo.num_nodes, max_iters)
     return CCResult(labels, it)

@@ -1,0 +1,617 @@
+"""PBExecutor — the single entry point for every irregular-update stream.
+
+The paper's thesis is that Propagation Blocking is *one* optimization
+that serves graph processing (PageRank §5.2, Components), pre-processing
+(Neighbor-Populate, Algorithm 2) and — in this repo's extension — the
+LM-framework streams (MoE dispatch, embedding gradients) alike. Before
+this module, every consumer hand-picked its own binning path; now they
+all register a *stream* and the executor picks the *method*:
+
+  ``sort``          — XLA stable sort by bin id (``pb.binning_sort``),
+                      the semantic reference. Best for short streams
+                      where sort latency dominates (paper §3's software
+                      PB at small inputs).
+  ``counting``      — blockwise counting sort with per-bin VMEM cursors
+                      (``pb.binning_counting``) — Algorithm 2's Binning
+                      phase, one bin range per pass.
+  ``pallas``        — the same algorithm as the Pallas TPU kernels
+                      (``kernels.binning.counting_positions``): histogram
+                      + positions + scatter. 1-D single-array values only.
+  ``hierarchical``  — multi-pass COBRA (``core.cobra``), the §4 knob-free
+                      execution driven by a ``CobraPlan``: used when one
+                      pass's C-Buffer fan-out would exceed the fast level.
+
+Selection is plan-driven (``HardwareModel`` capacities, paper §3's two
+optima) with an optional **measured autotuner**: timings are cached per
+``(num_indices, stream_len, dtype, backend)`` key, persisted under
+``~/.cache/repro_pb/`` (override with ``REPRO_PB_CACHE_DIR``), with an
+in-repo fallback table for cold starts on read-only filesystems. The
+full decision tree is documented in DESIGN.md §3.
+
+A ``vmap``-able batched path (``bin_streams`` / ``scatter_add_batched``)
+serves many-small-frontier traffic: one decision covers the whole batch,
+amortizing planning the way serving-style workloads need.
+
+Extending with a new workload = expressing it as an (indices, values)
+stream and calling this module — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import math
+import os
+import time
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pb
+from repro.core.cobra import hierarchical_binning
+from repro.core.plan import (
+    CobraPlan,
+    HardwareModel,
+    binning_optimal_num_bins,
+    compromise_bin_range,
+    num_bins_for_range,
+)
+
+METHODS = ("sort", "counting", "pallas", "hierarchical")
+
+# Below this stream length XLA's stable sort is latency-, not
+# bandwidth-bound, and always wins (DESIGN.md §3.1).
+_SORT_THRESHOLD = 4096
+
+
+# ---------------------------------------------------------------------------
+# Functional core: jit-friendly, method chosen statically.
+# ---------------------------------------------------------------------------
+
+
+def execute_binning(
+    indices: jnp.ndarray,
+    values,
+    *,
+    bin_range: int,
+    num_bins: int,
+    method: str = "sort",
+    plan: Optional[CobraPlan] = None,
+    block: int = 2048,
+    interpret: Optional[bool] = None,
+) -> pb.Bins:
+    """Bin one (indices, values) stream with the given method.
+
+    This is the executor's traceable core (callers may jit around it;
+    ``method``/``bin_range``/``num_bins`` are static). Every method is a
+    stable partition by ``indices // bin_range``, so all four agree with
+    ``kernels.ref.binned_stream_ref`` — the invariant that keeps
+    non-commutative consumers (paper §2) correct under method swaps.
+
+    ``interpret=None`` resolves per backend (interpret-mode Pallas off
+    TPU, compiled Mosaic on TPU).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if method not in METHODS:
+        raise ValueError(f"unknown binning method: {method!r} (want one of {METHODS})")
+    m = indices.shape[0]
+    if m == 0:  # empty frontier: nothing to route
+        nb = plan.num_bins if (method == "hierarchical" and plan) else num_bins
+        return pb.Bins(
+            idx=indices,
+            val=values,
+            starts=jnp.zeros((nb + 1,), jnp.int32),
+            bin_range=bin_range,
+        )
+    if method == "sort":
+        return pb.binning_sort(indices, values, bin_range, num_bins)
+    if method == "counting":
+        return pb.binning_counting(indices, values, bin_range, num_bins, block=block)
+    if method == "pallas":
+        if not (isinstance(values, jnp.ndarray) and values.ndim == 1):
+            raise ValueError("pallas binning supports a single 1-D value array")
+        from repro.kernels import ops  # deferred: kernels import pallas
+
+        return ops.pb_binning(
+            indices,
+            values,
+            bin_range=bin_range,
+            num_bins=num_bins,
+            block=min(block, 1024),
+            interpret=interpret,
+        )
+    # hierarchical
+    if plan is None:
+        raise ValueError("hierarchical binning needs a CobraPlan")
+    return hierarchical_binning(indices, values, plan, method="counting", block=block)
+
+
+class BatchedBins(NamedTuple):
+    """A batch of binned streams (leading batch axis on every field).
+
+    The batched analogue of ``pb.Bins`` for serving-style traffic: many
+    small frontiers binned under ONE executor decision.
+    """
+
+    idx: jnp.ndarray  # (B, m)
+    val: jnp.ndarray  # (B, m, ...)
+    starts: jnp.ndarray  # (B, num_bins+1)
+    bin_range: int
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bin_range", "num_bins", "method", "block")
+)
+def _binning_batched(indices, values, bin_range, num_bins, method, block):
+    def one(ix, vx):
+        b = execute_binning(
+            ix, vx, bin_range=bin_range, num_bins=num_bins, method=method, block=block
+        )
+        return b.idx, b.val, b.starts
+
+    return jax.vmap(one)(indices, values)
+
+
+def bin_streams_batched(
+    indices: jnp.ndarray,
+    values,
+    *,
+    bin_range: int,
+    num_bins: int,
+    method: str = "sort",
+    block: int = 2048,
+) -> BatchedBins:
+    """vmap the binning core over a leading batch axis.
+
+    Only the pure-XLA methods batch (``sort``/``counting``); the Pallas
+    and multi-pass paths are per-stream. One (method, bin_range) decision
+    serves the whole batch — planning amortized across frontiers.
+    """
+    if method not in ("sort", "counting"):
+        raise ValueError(f"batched binning supports sort|counting, got {method!r}")
+    idx, val, starts = _binning_batched(
+        indices, values, bin_range, num_bins, method, block
+    )
+    return BatchedBins(idx=idx, val=val, starts=starts, bin_range=bin_range)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch routing (MoE): Binning of a (token, expert) assignment stream.
+# ---------------------------------------------------------------------------
+
+
+def dispatch_permutation(
+    key: jnp.ndarray, num_slots: int, method: str = "sort", block: int = 2048
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stable counting-sort routing for capacity-bounded dispatch.
+
+    This is the paper's Binning phase (Algorithm 2 line "insert into
+    bin") applied to MoE expert dispatch (DESIGN.md §3.2): ``key[a]`` is
+    the slot of assignment ``a`` in ``[0, num_slots]``, where slot
+    ``num_slots`` is the overflow bin for assignments routed elsewhere.
+
+    Returns ``(order, key_sorted, starts, rank)``:
+      order       stable permutation grouping assignments by slot;
+      key_sorted  ``key[order]``;
+      starts      (num_slots+2,) exclusive prefix of slot counts;
+      rank        in-slot arrival rank of each sorted assignment (the
+                  per-bin cursor value — used for capacity clipping).
+
+    ``method="sort"`` uses XLA argsort; ``method="counting"`` uses the
+    blockwise counting-sort permutation (`pb.counting_permutation`), the
+    PB-structured path the Pallas kernels implement. Both are stable, so
+    the routing (and therefore model numerics) is method-independent.
+    """
+    a = key.shape[0]
+    nb = num_slots + 1
+    if method == "counting":
+        dest, counts = pb.counting_permutation(key, nb, block=block)
+        starts = pb.starts_from_counts(counts)
+        order = jnp.zeros((a,), jnp.int32).at[dest].set(
+            jnp.arange(a, dtype=jnp.int32)
+        )
+    elif method == "sort":
+        order = jnp.argsort(key, stable=True)
+        starts = pb.starts_from_counts(jnp.bincount(key, length=nb).astype(jnp.int32))
+    else:
+        raise ValueError(
+            f"unknown dispatch method: {method!r} (want 'sort' or 'counting')"
+        )
+    key_s = jnp.take(key, order)
+    rank = jnp.arange(a, dtype=jnp.int32) - jnp.take(starts, key_s)
+    return order, key_s, starts, rank
+
+
+# ---------------------------------------------------------------------------
+# Decisions, fallback table, autotune cache.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BinningDecision:
+    """What the executor chose for one stream shape, and why."""
+
+    method: str
+    bin_range: int
+    num_bins: int
+    plan: Optional[CobraPlan]
+    source: str  # analytic | fallback-table | autotuned | cache
+
+    def describe(self) -> str:
+        return f"{self.method}@r{self.bin_range}[{self.source}]"
+
+
+def _bucket(x: int) -> int:
+    return max(0, int(math.log2(x))) if x > 0 else 0
+
+
+# In-repo fallback table: (log2 num_indices, log2 stream_len) -> method.
+# Seeded from interpret-mode measurements on this container (see
+# benchmarks/executor_autotune.py); consulted when no measured cache
+# entry exists and autotuning is off — e.g. cold start on a read-only
+# filesystem. Coarse on purpose: buckets not listed fall through to the
+# analytic model (DESIGN.md §3.1).
+_FALLBACK_TABLE = {
+    (8, 10): "sort",
+    (8, 12): "sort",
+    (10, 12): "sort",
+    (10, 14): "counting",
+    (12, 14): "counting",
+    (12, 16): "counting",
+    (14, 16): "hierarchical",
+    (14, 18): "hierarchical",
+    (16, 17): "hierarchical",
+    (16, 18): "hierarchical",
+    (16, 20): "hierarchical",
+    (18, 20): "hierarchical",
+    (20, 22): "hierarchical",
+}
+
+
+class _AutotuneCache:
+    """Measured-decision cache: in-memory dict + best-effort JSON persistence.
+
+    Per-process entries always work; the on-disk layer degrades silently
+    (read-only HOME, exotic containers) so the executor never fails a
+    workload over a cache write.
+    """
+
+    def __init__(self, cache_dir: Optional[str] = None):
+        self.dir = (
+            cache_dir
+            or os.environ.get("REPRO_PB_CACHE_DIR")
+            or os.path.join(os.path.expanduser("~"), ".cache", "repro_pb")
+        )
+        self.path = os.path.join(self.dir, "autotune.json")
+        self.mem: dict = {}
+        self.persist_ok = True
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+            if isinstance(blob, dict) and blob.get("version") == 1:
+                self.mem.update(blob.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+
+    def _save(self) -> None:
+        if not self.persist_ok:
+            return
+        try:
+            os.makedirs(self.dir, exist_ok=True)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"version": 1, "entries": self.mem}, f, indent=1)
+            os.replace(tmp, self.path)
+        except OSError:
+            self.persist_ok = False  # degrade to in-memory only
+
+    def get(self, key: str) -> Optional[dict]:
+        return self.mem.get(key)
+
+    def put(self, key: str, entry: dict) -> None:
+        self.mem[key] = entry
+        self._save()
+
+
+# ---------------------------------------------------------------------------
+# The executor.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def _jitted_binning(bin_range, num_bins, method, block, interpret, plan):
+    def f(idx, val):
+        return execute_binning(
+            idx,
+            val,
+            bin_range=bin_range,
+            num_bins=num_bins,
+            method=method,
+            plan=plan,
+            block=block,
+            interpret=interpret,
+        )
+
+    return jax.jit(f)
+
+
+class PBExecutor:
+    """Plan-driven (and optionally measured) PB execution.
+
+    One instance per hardware model; consumers share the process-wide
+    default from ``get_default_executor()``. ``autotune=True`` makes
+    ``decide`` measure every candidate method on a synthetic stream of
+    the requested shape (once per key; results cached and persisted).
+    """
+
+    def __init__(
+        self,
+        hw: Optional[HardwareModel] = None,
+        *,
+        autotune: bool = False,
+        cache_dir: Optional[str] = None,
+        use_pallas: bool = False,
+        block: int = 2048,
+        interpret: Optional[bool] = None,
+    ):
+        self.hw = hw or HardwareModel.tpu_v5e()
+        self.autotune = autotune
+        self.use_pallas = use_pallas
+        self.block = block
+        self.interpret = (
+            interpret if interpret is not None else jax.default_backend() != "tpu"
+        )
+        self.cache = _AutotuneCache(cache_dir)
+
+    # -- decision ----------------------------------------------------------
+
+    def _key(
+        self, num_indices: int, stream_len: int, dtype, bin_range: Optional[int] = None
+    ) -> str:
+        # bin_range is part of the key: a method measured at one range is
+        # not evidence about another (counting's cost is ~linear in the
+        # C-Buffer fan-out, i.e. in num_indices/bin_range).
+        base = (
+            f"{num_indices}:{stream_len}:{jnp.dtype(dtype).name}:"
+            f"{jax.default_backend()}"
+        )
+        return f"{base}:r{bin_range}" if bin_range else base
+
+    def _candidates(self, flat_values: bool) -> Tuple[str, ...]:
+        c = ["sort", "counting"]
+        if self.use_pallas and flat_values:
+            c.append("pallas")
+        c.append("hierarchical")
+        return tuple(c)
+
+    def _finalize(
+        self, method: str, num_indices: int, bin_range: Optional[int], source: str
+    ) -> BinningDecision:
+        """Attach the range/plan to a chosen method (paper §3: flat
+        methods run at the compromise range unless the caller fixed one;
+        §4: hierarchical always ends at the Bin-Read-optimal range)."""
+        if method == "hierarchical":
+            plan = CobraPlan.from_hardware(
+                num_indices, self.hw, final_bin_range=bin_range
+            )
+            return BinningDecision(
+                method, plan.final_bin_range, plan.num_bins, plan, source
+            )
+        r = bin_range or max(1, min(compromise_bin_range(num_indices, self.hw), num_indices))
+        return BinningDecision(method, r, num_bins_for_range(num_indices, r), None, source)
+
+    def analytic_method(
+        self, num_indices: int, stream_len: int, bin_range: Optional[int] = None
+    ) -> str:
+        """The DESIGN.md §3.1 decision tree (no measurement), evaluated
+        at the *effective* range — a caller-fixed ``bin_range`` changes
+        the fan-out and therefore the right method."""
+        if stream_len < _SORT_THRESHOLD or num_indices <= 1:
+            return "sort"
+        r = bin_range or max(
+            1, min(compromise_bin_range(num_indices, self.hw), num_indices)
+        )
+        if num_bins_for_range(num_indices, r) <= binning_optimal_num_bins(self.hw):
+            return "pallas" if self.use_pallas else "counting"
+        return "hierarchical"
+
+    def decide(
+        self,
+        num_indices: int,
+        stream_len: int,
+        dtype=jnp.int32,
+        *,
+        bin_range: Optional[int] = None,
+        flat_values: bool = True,
+    ) -> BinningDecision:
+        """Pick (method, bin_range, plan) for a stream shape.
+
+        Priority: measured cache -> live autotune (if enabled) ->
+        in-repo fallback table -> analytic hardware model.
+        """
+        key = self._key(num_indices, stream_len, dtype, bin_range)
+        hit = self.cache.get(key)
+        if hit is not None and hit.get("method") in self._candidates(flat_values):
+            return self._finalize(hit["method"], num_indices, bin_range, "cache")
+        if self.autotune and stream_len > 0:
+            entry = self.measure_methods(num_indices, stream_len, dtype, bin_range, flat_values)
+            self.cache.put(key, entry)
+            return self._finalize(entry["method"], num_indices, bin_range, "autotuned")
+        # The fallback table is bucketed on the *default* (compromise)
+        # range; a caller-fixed range changes the fan-out, so skip the
+        # table and evaluate the analytic tree at that range instead.
+        if bin_range is None:
+            tkey = (_bucket(num_indices), _bucket(stream_len))
+            m = _FALLBACK_TABLE.get(tkey)
+            if m is not None and m in self._candidates(flat_values):
+                return self._finalize(m, num_indices, bin_range, "fallback-table")
+        return self._finalize(
+            self.analytic_method(num_indices, stream_len, bin_range),
+            num_indices,
+            bin_range,
+            "analytic",
+        )
+
+    # -- autotune measurement ---------------------------------------------
+
+    def measure_methods(
+        self,
+        num_indices,
+        stream_len,
+        dtype=jnp.int32,
+        bin_range=None,
+        flat_values=True,
+        reps: int = 3,
+    ) -> dict:
+        """Time every candidate method on a synthetic stream of this
+        shape; returns ``{"method": best, "timings_us": {...}}``. The
+        measured answer to the paper's §3 compromise — used by ``decide``
+        when autotuning and by benchmarks/executor_autotune.py."""
+        rng = np.random.default_rng(num_indices * 1_000_003 + stream_len)
+        idx = jnp.asarray(
+            rng.integers(0, max(1, num_indices), stream_len), jnp.int32
+        )
+        val = jnp.arange(stream_len, dtype=dtype)
+        timings = {}
+        for method in self._candidates(flat_values):
+            d = self._finalize(method, num_indices, bin_range, "probe")
+            fn = _jitted_binning(
+                d.bin_range, d.num_bins, method, self.block, self.interpret, d.plan
+            )
+            try:
+                jax.block_until_ready(fn(idx, val))  # compile + warm
+                ts = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(idx, val))
+                    ts.append(time.perf_counter() - t0)
+                timings[method] = min(ts) * 1e6
+            except Exception:  # a method may be unsupported on a backend
+                continue
+        best = min(timings, key=timings.get) if timings else "sort"
+        return {"method": best, "timings_us": timings}
+
+    # -- execution ---------------------------------------------------------
+
+    def bin_stream(
+        self,
+        indices: jnp.ndarray,
+        values,
+        *,
+        num_indices: int,
+        bin_range: Optional[int] = None,
+        method: Optional[str] = None,
+    ) -> pb.Bins:
+        """Bin one stream. The single call path every workload uses
+        (pagerank, components, neighbor_populate, benchmarks).
+
+        ``method=None`` (or "auto") consults ``decide``; an explicit
+        method skips planning but still routes through the shared core.
+        """
+        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        if method in (None, "auto"):
+            d = self.decide(
+                num_indices,
+                int(indices.shape[0]),
+                indices.dtype,
+                bin_range=bin_range,
+                flat_values=flat,
+            )
+        else:
+            d = self._finalize(method, num_indices, bin_range, "caller")
+        fn = _jitted_binning(
+            d.bin_range, d.num_bins, d.method, self.block, self.interpret, d.plan
+        )
+        b = fn(indices, values)
+        return pb.Bins(b.idx, b.val, b.starts, d.bin_range)
+
+    def bin_streams(
+        self,
+        indices: jnp.ndarray,
+        values,
+        *,
+        num_indices: int,
+        bin_range: Optional[int] = None,
+        method: Optional[str] = None,
+    ) -> BatchedBins:
+        """Batched-frontier path: indices (B, m). One decision for the
+        whole batch (restricted to the vmap-able methods)."""
+        if method in (None, "auto"):
+            d = self.decide(
+                num_indices, int(indices.shape[1]), indices.dtype, bin_range=bin_range
+            )
+            m = d.method if d.method in ("sort", "counting") else "sort"
+            d = self._finalize(m, num_indices, bin_range, d.source)
+        else:
+            d = self._finalize(method, num_indices, bin_range, "caller")
+        return bin_streams_batched(
+            indices,
+            values,
+            bin_range=d.bin_range,
+            num_bins=d.num_bins,
+            method=d.method,
+            block=self.block,
+        )
+
+    def scatter_add(
+        self,
+        indices: jnp.ndarray,
+        values: jnp.ndarray,
+        *,
+        out_size: int,
+        bin_range: Optional[int] = None,
+        method: Optional[str] = None,
+    ) -> jnp.ndarray:
+        """Full PB scatter-add (Binning + commutative Bin-Read), the
+        paper's Fig. 1 pipeline for additive updates."""
+        b = self.bin_stream(
+            indices, values, num_indices=out_size, bin_range=bin_range, method=method
+        )
+        return pb.bin_read_scatter_add(b, out_size, out_dtype=values.dtype)
+
+    def scatter_add_batched(
+        self,
+        indices: jnp.ndarray,
+        values: jnp.ndarray,
+        *,
+        out_size: int,
+        bin_range: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Batched scatter-add over (B, m) streams -> (B, out_size)."""
+        bb = self.bin_streams(
+            indices, values, num_indices=out_size, bin_range=bin_range
+        )
+
+        def one(ix, vx):
+            out = jnp.zeros((out_size,) + vx.shape[1:], vx.dtype)
+            return out.at[ix].add(vx)
+
+        return jax.vmap(one)(bb.idx, bb.val)
+
+
+_DEFAULT: Optional[PBExecutor] = None
+
+
+def get_default_executor() -> PBExecutor:
+    """Process-wide executor. ``REPRO_PB_AUTOTUNE=1`` turns on measured
+    selection; ``REPRO_PB_USE_PALLAS=1`` adds the Pallas kernels to the
+    candidate set (interpret-mode on CPU containers)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = PBExecutor(
+            autotune=os.environ.get("REPRO_PB_AUTOTUNE", "0") == "1",
+            use_pallas=os.environ.get("REPRO_PB_USE_PALLAS", "0") == "1",
+        )
+    return _DEFAULT
+
+
+def set_default_executor(ex: Optional[PBExecutor]) -> None:
+    """Swap the process-wide executor (tests, notebooks)."""
+    global _DEFAULT
+    _DEFAULT = ex

@@ -18,6 +18,10 @@ Variants:
                               then per-bin fine grouping (Bin-Read).
   * ``build_csr_cobra``     — hierarchical (knob-free) COBRA execution.
 
+All Binning goes through the shared ``core.executor`` layer (DESIGN.md
+§3); this module only states the *stream* (edges keyed by src vertex)
+and the Bin-Read that follows.
+
 All variants produce a CSR whose per-vertex neighbor *sets* are equal;
 baseline/pb/cobra additionally preserve EL order within each vertex
 (stability), matching the oracle exactly.
@@ -30,8 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pb
-from repro.core.cobra import hierarchical_binning
+from repro.core.executor import execute_binning, get_default_executor
 from repro.core.graph import COO, CSR, degrees_from_coo, offsets_from_degrees
 from repro.core.plan import CobraPlan
 
@@ -65,14 +68,18 @@ def build_csr_baseline(coo: COO) -> CSR:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_nodes", "bin_range", "method", "block")
+    jax.jit, static_argnames=("num_nodes", "bin_range", "method", "block", "plan")
 )
-def _pb_build(src, dst, num_nodes, bin_range, method="sort", block=2048):
+def _pb_build(src, dst, num_nodes, bin_range, method="sort", block=2048, plan=None):
     degrees = jnp.bincount(src, length=num_nodes).astype(jnp.int32)
     offsets = offsets_from_degrees(degrees)
     num_bins = -(-num_nodes // bin_range)
-    # Phase 1: Binning (coarse range). Stable: in-bin stream order kept.
-    bins = pb.binning(src, dst, bin_range, num_bins, method=method, block=block)
+    # Phase 1: Binning (coarse range) through the shared executor core.
+    # Stable: in-bin stream order kept.
+    bins = execute_binning(
+        src, dst, bin_range=bin_range, num_bins=num_bins, method=method,
+        plan=plan, block=block,
+    )
     # Phase 2: Bin-Read — group by exact src *within* the binned stream.
     # Because the stream is already grouped at bin granularity, this pass's
     # random accesses span only one bin range at a time (the locality PB
@@ -83,30 +90,35 @@ def _pb_build(src, dst, num_nodes, bin_range, method="sort", block=2048):
 
 
 def build_csr_pb(
-    coo: COO, bin_range: int, method: str = "sort", block: int = 2048
+    coo: COO, bin_range: int | None = None, method: str = "sort", block: int = 2048
 ) -> CSR:
+    """Algorithm 2 EL->CSR (paper Table 1's NeighPop row). ``method`` is
+    any executor method, or "auto" to let the executor decide; a ``None``
+    bin_range asks the executor for the planned range."""
+    if method == "auto" or bin_range is None:
+        d = get_default_executor().decide(
+            coo.num_nodes, coo.num_edges, coo.src.dtype, bin_range=bin_range
+        )
+        method = d.method if method == "auto" else method
+        bin_range = d.bin_range
+    plan = None
+    if method == "hierarchical":
+        plan = CobraPlan.from_hardware(coo.num_nodes, final_bin_range=bin_range)
+        bin_range = plan.final_bin_range
     offsets, neighs = _pb_build(
-        coo.src, coo.dst, coo.num_nodes, bin_range, method=method, block=block
+        coo.src, coo.dst, coo.num_nodes, bin_range, method=method, block=block,
+        plan=plan,
     )
     return CSR(offsets, neighs, coo.num_nodes)
 
 
-@functools.lru_cache(maxsize=64)
-def _cobra_builder(num_nodes: int, plan: CobraPlan):
-    @jax.jit
-    def run(src, dst):
-        degrees = jnp.bincount(src, length=num_nodes).astype(jnp.int32)
-        offsets = offsets_from_degrees(degrees)
-        bins = hierarchical_binning(src, dst, plan, method="sort")
-        perm = jnp.argsort(bins.idx, stable=True)
-        return offsets, jnp.take(bins.val, perm)
-
-    return run
-
-
 def build_csr_cobra(coo: COO, plan: CobraPlan | None = None) -> CSR:
+    """Knob-free COBRA build (paper §4): hierarchical executor method."""
     plan = plan or CobraPlan.from_hardware(coo.num_nodes)
-    offsets, neighs = _cobra_builder(coo.num_nodes, plan)(coo.src, coo.dst)
+    offsets, neighs = _pb_build(
+        coo.src, coo.dst, coo.num_nodes, plan.final_bin_range,
+        method="hierarchical", plan=plan,
+    )
     return CSR(offsets, neighs, coo.num_nodes)
 
 

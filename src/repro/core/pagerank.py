@@ -26,7 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import pb
+from repro.core.executor import get_default_executor
 from repro.core.graph import COO, CSR, degrees_from_coo, segment_ids_from_offsets
 
 
@@ -111,12 +111,16 @@ def _pr_pb(src_b, dst_b, num_nodes, iters, bin_range, coalesce):
     return jax.lax.fori_loop(0, iters, body, ranks)
 
 
-def pb_bin_edges(coo: COO, bin_range: int):
-    """The PB pre-processing step for push PageRank: bin edges by
-    destination range once; iterations then scatter in near-sequential
-    order. Returns (src_binned, dst_binned)."""
-    num_bins = -(-coo.num_nodes // bin_range)
-    bins = pb.binning_sort(coo.dst, coo.src, bin_range, num_bins)
+def pb_bin_edges(coo: COO, bin_range: int, method: str | None = None):
+    """The PB pre-processing step for push PageRank (paper Table 1's
+    PR row): bin edges by destination range once via the shared executor
+    (DESIGN.md §3); iterations then scatter in near-sequential order.
+    ``method=None`` lets the executor pick. Returns (src_binned,
+    dst_binned)."""
+    bins = get_default_executor().bin_stream(
+        coo.dst, coo.src, num_indices=coo.num_nodes, bin_range=bin_range,
+        method=method,
+    )
     return bins.val, bins.idx
 
 

@@ -134,9 +134,16 @@ class CobraPlan:
         hw: HardwareModel | None = None,
         value_bytes_per_index: int = 8,
         max_fanout: int | None = None,
+        final_bin_range: int | None = None,
     ) -> "CobraPlan":
+        """Derive the knob-free plan (paper §4.2). ``final_bin_range``
+        overrides the Bin-Read-optimal range when a consumer needs bins at
+        a specific granularity (e.g. a pre-binned PageRank loop)."""
         hw = hw or HardwareModel.tpu_v5e()
-        final_range = min(binread_optimal_range(hw, value_bytes_per_index), num_indices)
+        final_range = final_bin_range or min(
+            binread_optimal_range(hw, value_bytes_per_index), num_indices
+        )
+        final_range = max(1, min(final_range, num_indices))
         total_bins = num_bins_for_range(num_indices, final_range)
         per_pass = max_fanout or binning_optimal_num_bins(hw)
         fanouts: List[int] = []

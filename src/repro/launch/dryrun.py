@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.registry import SHAPES, ShapeSpec, cells, get_config
 from repro.distributed import sharding as shd
 from repro.launch.mesh import HW, make_production_mesh
@@ -186,7 +187,7 @@ def probe_cfg(cfg: ModelConfig, n_layers: int) -> ModelConfig:
 def compile_cost(cfg: ModelConfig, shape: ShapeSpec, mesh, accum_steps: int = 1) -> CellCost:
     lowered = lower_cell(cfg, shape, mesh, accum_steps=accum_steps)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text())
     return CellCost(
         flops=float(ca.get("flops", 0.0)),

@@ -38,6 +38,10 @@ class ModelConfig:
     top_k: int = 0
     capacity_factor: float = 1.25
     moe_dispatch: str = "pb"  # pb (shard_map counting-sort) | einsum
+    # executor routing method for the PB dispatch (core/executor.py,
+    # DESIGN.md §3.2): "sort" (XLA argsort) | "counting" (blockwise
+    # counting-sort permutation). Both stable -> identical numerics.
+    moe_dispatch_method: str = "sort"
 
     # SSM / hybrid
     ssm_state: int = 0

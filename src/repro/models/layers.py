@@ -11,8 +11,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
+from repro.core.executor import dispatch_permutation
 from repro.distributed import sharding as shd
 from repro.models.config import ModelConfig
 from repro.models import params as pp
@@ -428,12 +429,10 @@ def _moe_expert_shard(x2d, wr, w1, w3, w2, cfg: ModelConfig, e_start, E_local):
     valid = jnp.logical_and(local_e >= 0, local_e < E_local)
     key = jnp.where(valid, local_e, E_local)  # invalid -> overflow bin
 
-    # --- Binning: stable counting sort by expert id, capacity-clipped ---
-    order = jnp.argsort(key, stable=True)
-    key_s = jnp.take(key, order)
-    counts = jnp.bincount(key, length=E_local + 1)
-    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts).astype(jnp.int32)])
-    rank = jnp.arange(key_s.shape[0], dtype=jnp.int32) - jnp.take(starts, key_s)
+    # --- Binning: executor dispatch routing, capacity-clipped ---
+    order, key_s, _, rank = dispatch_permutation(
+        key, E_local, method=cfg.moe_dispatch_method
+    )
     keep = jnp.logical_and(key_s < E_local, rank < C)
     slot = jnp.where(keep, key_s * C + rank, E_local * C)  # OOB -> dropped
     token_of = jnp.take(jnp.arange(T, dtype=jnp.int32).repeat(k), order)
@@ -505,13 +504,9 @@ def _moe_weight_stationary(p, x, cfg: ModelConfig, mesh):
         local_e = flat_e - e_start
         valid = jnp.logical_and(local_e >= 0, local_e < E_local)
         key = jnp.where(valid, local_e, E_local)
-        order = jnp.argsort(key, stable=True)
-        key_s = jnp.take(key, order)
-        counts = jnp.bincount(key, length=E_local + 1)
-        starts = jnp.concatenate(
-            [jnp.zeros(1, jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+        order, key_s, _, rank = dispatch_permutation(
+            key, E_local, method=cfg.moe_dispatch_method
         )
-        rank = jnp.arange(key_s.shape[0], dtype=jnp.int32) - jnp.take(starts, key_s)
         keep = jnp.logical_and(key_s < E_local, rank < C)
         slot = jnp.where(keep, key_s * C + rank, E_local * C)
         token_of = jnp.take(jnp.arange(T, dtype=jnp.int32).repeat(k), order)
