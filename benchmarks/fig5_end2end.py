@@ -20,19 +20,34 @@ from repro.core import (
     graph_suite,
     pagerank_coo_scatter,
     pagerank_csr_pull,
+    pagerank_fused,
     pagerank_pb,
     transpose_coo,
 )
+from repro.roofline import PBStreamRoofline
 from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
 from repro.core import traffic
 
 ITERS = 10
 
 
+def _fused_legal_at_paper_scale(hw) -> bool:
+    """Fused legality at the modeled Xeon scale (DESIGN.md §8.1): the
+    dense accumulator must fit the fast hierarchy — at 32M vertices it
+    exceeds the LLC, so the executor would fall back and the honest
+    modeled column says so instead of modeling an illegal run. Uses the
+    executor's own check (one instantiation, loop-invariant)."""
+    from benchmarks.common import PAPER_N
+    from repro.core import PBExecutor
+
+    return PBExecutor(hw=hw).fused_fits(PAPER_N)
+
+
 def run() -> Rows:
     rows = Rows()
     hw = HardwareModel.cpu_xeon()
     suite = graph_suite(graph_scale())
+    fused_legal = _fused_legal_at_paper_scale(hw)
     for name, g in suite.items():
         n, m = g.num_nodes, g.num_edges
         br = min(max(64, compromise_bin_range(n, hw)), n)
@@ -61,6 +76,9 @@ def run() -> Rows:
             )[1],
             g,
         )
+        # E: fused single-sweep PR (DESIGN.md §8) — no CSR build, no
+        # binned intermediate; each iteration bins+accumulates in one pass
+        tE = time_fn(lambda gg: pagerank_fused(gg, iters=ITERS).ranks, g)
         # modeled Xeon end-to-end at the paper's graph scale
         from benchmarks.common import PAPER_M, PAPER_N
 
@@ -76,11 +94,21 @@ def run() -> Rows:
         mD = traffic.cobra_seconds(PAPER_M, plan_p, hw) + (
             traffic.pr_cobra_iter_seconds(PAPER_M, plan_p, hw) * ITERS
         )
+        if fused_legal:
+            mE = traffic.pr_fused_iter_seconds(PAPER_M, PAPER_N, hw) * ITERS
+            e_mod = f"E/A={mA/mE:.2f}"
+        else:
+            e_mod = "E/A=n/a(acc>LLC)"
+        # per-iteration stream bytes, two-phase vs fused (DESIGN.md §8)
+        rl = PBStreamRoofline(num_tuples=PAPER_M, num_indices=PAPER_N)
         rows.add(
             f"fig5/{name}",
             tD * 1e6,
-            f"measured B/A={tA/tB:.2f} C/A={tA/tC:.2f} D/A={tA/tD:.2f} | "
+            f"measured B/A={tA/tB:.2f} C/A={tA/tC:.2f} D/A={tA/tD:.2f} "
+            f"E/A={tA/tE:.2f} | "
             f"modeled B/A={mA/mB:.2f} C/A={mA/mC:.2f} D/A={mA/mD:.2f} "
+            f"{e_mod} | iter_bytes two_phase={rl.two_phase_bytes:.3g} "
+            f"fused={rl.fused_bytes:.3g} ({rl.speedup_ceiling:.2f}x ceiling) "
             f"(paper means 1.48/2.25/3.5)",
         )
     return rows

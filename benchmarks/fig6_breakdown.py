@@ -9,16 +9,26 @@ compromise, a further 1.35x from removing binning instruction overhead,
     analogue is the FUSED binning kernel vs. the multi-op XLA pipeline:
     we measure fused counting-sort binning (single fused scan) against
     the unfused histogram->positions->scatter composition.
+
+Beyond the paper, the third effect this repo adds (DESIGN.md §8): the
+fused single-sweep bin-and-accumulate removes the materialized binned
+stream entirely. Per graph we report measured-vs-modeled bytes for both
+executions — modeled from the explicit traffic counters
+(core/traffic.py), measured from compiled-HLO cost analysis
+(roofline.hlo_bytes_accessed) — plus wall-clock of fused vs the
+two-phase pipeline at equal semantics (a full scatter-add).
 """
 from __future__ import annotations
 
 import jax
 
 from benchmarks.common import Rows, graph_scale, time_fn
-from repro.core import graph_suite
+from repro.core import get_default_executor, graph_suite
 from repro.core import pb as pb_core
+from repro.core.executor import execute_reduce
 from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
 from repro.core import traffic
+from repro.roofline import hlo_bytes_accessed
 
 
 def run() -> Rows:
@@ -66,6 +76,40 @@ def run() -> Rows:
         0.0,
         f"modeled COBRA/PB={mod_pb/mod_cobra:.2f}x (paper 1.74x)",
     )
+
+    # fused single sweep vs two-phase PB: bytes moved (modeled traffic
+    # counters + measured HLO bytes) and wall-clock, per graph
+    ex = get_default_executor()
+    for name, gg in graph_suite(graph_scale()).items():
+        n, m = gg.num_nodes, gg.num_edges
+        r = min(max(64, compromise_bin_range(n, hw)), n)
+        nb = max(1, -(-n // r))
+        ones = jax.numpy.ones((m,), jax.numpy.float32)
+        two_method = ex.analytic_method(n, m, r)
+        if two_method == "hierarchical":
+            two_method = "counting" if nb <= 4096 else "sort"
+
+        def two_phase(dst, v, _r=r, _nb=nb, _mth=two_method):
+            bins = pb_core.binning(dst, v, _r, _nb, method=_mth)
+            return pb_core.bin_read_scatter_add(bins, n)
+
+        def fused(dst, v):
+            return execute_reduce(dst, v, out_size=n, op="add", method="fused")
+
+        t_two = time_fn(jax.jit(two_phase), gg.dst, ones)
+        t_fus = time_fn(jax.jit(fused), gg.dst, ones)
+        b_two = hlo_bytes_accessed(two_phase, gg.dst, ones)
+        b_fus = hlo_bytes_accessed(fused, gg.dst, ones)
+        mod_two = traffic.pb_two_phase_stream_bytes(m, n)
+        mod_fus = traffic.fused_stream_bytes(m, n)
+        rows.add(
+            f"fig6/fused_sweep/{name}",
+            t_fus * 1e6,
+            f"modeled_bytes fused={mod_fus:.3g} two_phase={mod_two:.3g} "
+            f"({mod_two/mod_fus:.2f}x fewer) | measured_hlo_bytes "
+            f"fused={b_fus:.3g} two_phase={b_two:.3g} | "
+            f"measured two_phase/fused={t_two/t_fus:.2f}x ({two_method})",
+        )
     return rows
 
 

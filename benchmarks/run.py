@@ -3,10 +3,13 @@ integration benches. Prints ``name,us_per_call,derived`` CSV.
 
 BENCH_SCALE=small (default, CI-sized) | full (EXPERIMENTS.md numbers).
 ``--smoke`` runs a fast subset (1 rep, 1 warmup, small scale) — the
-benchmark leg of scripts/verify.sh.
+benchmark leg of scripts/verify.sh — and writes ``BENCH_smoke.json``
+(rows + every PBExecutor method decision) at the repo root so each PR
+leaves a perf trajectory the next one can diff against.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -28,9 +31,36 @@ MODULES = [
 # selection bench, and one framework-integration stream.
 SMOKE_MODULES = [
     "benchmarks.table1_pb_speedup",
+    "benchmarks.fig6_breakdown",
     "benchmarks.executor_autotune",
     "benchmarks.moe_dispatch",
 ]
+
+
+def _write_smoke_json(all_rows, module_secs) -> None:
+    """BENCH_smoke.json: timings + the executor's method decisions, the
+    perf trajectory future PRs diff against (ISSUE 2 CI/tooling)."""
+    import jax
+
+    from repro.core import get_default_executor
+
+    parsed = []
+    for row in all_rows:
+        name, us, derived = row.split(",", 2)
+        parsed.append({"name": name, "us_per_call": float(us), "derived": derived})
+    blob = {
+        "version": 1,
+        "scale": os.environ.get("BENCH_SCALE", "small"),
+        "backend": jax.default_backend(),
+        "rows": parsed,
+        "decisions": get_default_executor().decision_log,
+        "module_seconds": module_secs,
+    }
+    out = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "BENCH_smoke.json")
+    with open(out, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"# wrote {out}", file=sys.stderr)
 
 
 def main() -> None:
@@ -43,16 +73,22 @@ def main() -> None:
         modules = SMOKE_MODULES
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
+    module_secs = {}
     for modname in modules:
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["run"])
             for row in mod.run().emit():
+                all_rows.append(row)
                 print(row, flush=True)
+            module_secs[modname] = round(time.time() - t0, 1)
             print(f"# {modname} done in {time.time()-t0:.0f}s", file=sys.stderr)
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{modname},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    if smoke:
+        _write_smoke_json(all_rows, module_secs)
     if failures:
         raise SystemExit(f"{failures} benchmark module(s) failed")
 

@@ -1,11 +1,14 @@
 """Core: the paper's contribution (Propagation Blocking + COBRA) in JAX."""
 from repro.core.cobra import cobra_scatter_add, hierarchical_binning
+from repro.core.components import connected_components, connected_components_fused
 from repro.core.executor import (
     BatchedBins,
     BinningDecision,
     PBExecutor,
+    REDUCE_METHODS,
     dispatch_permutation,
     execute_binning,
+    execute_reduce,
     get_default_executor,
     set_default_executor,
 )
@@ -23,7 +26,12 @@ from repro.core.neighbor_populate import (
     build_csr_oracle,
     build_csr_pb,
 )
-from repro.core.pagerank import pagerank_coo_scatter, pagerank_csr_pull, pagerank_pb
+from repro.core.pagerank import (
+    pagerank_coo_scatter,
+    pagerank_csr_pull,
+    pagerank_fused,
+    pagerank_pb,
+)
 from repro.core.pb import Bins, binning, binning_counting, binning_sort
 from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
 from repro.core.scatter import pb_scatter_add, scatter_add_baseline
@@ -44,11 +52,15 @@ __all__ = [
     "build_csr_cobra",
     "build_csr_oracle",
     "build_csr_pb",
+    "REDUCE_METHODS",
     "cobra_scatter_add",
     "compromise_bin_range",
+    "connected_components",
+    "connected_components_fused",
     "degrees_from_coo",
     "dispatch_permutation",
     "execute_binning",
+    "execute_reduce",
     "get_default_executor",
     "set_default_executor",
     "graph_suite",
@@ -56,6 +68,7 @@ __all__ = [
     "offsets_from_degrees",
     "pagerank_coo_scatter",
     "pagerank_csr_pull",
+    "pagerank_fused",
     "pagerank_pb",
     "pb_scatter_add",
     "scatter_add_baseline",

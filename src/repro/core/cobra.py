@@ -49,11 +49,10 @@ def hierarchical_binning(
         nb = -(-plan.num_indices // rng)  # ceil: number of bins at this range
         if method == "counting" and nb <= 4096:
             dest, counts = pb.counting_permutation(key, nb, block=block)
-            m = idx.shape[0]
+            inv = pb.inverse_permutation(dest)
 
             def place(v):
-                out = jnp.zeros((m,) + v.shape[1:], dtype=v.dtype)
-                return out.at[dest].set(v)
+                return jnp.take(v, inv, axis=0)
 
             idx = place(idx)
             val = jax.tree.map(place, val)

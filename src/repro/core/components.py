@@ -56,6 +56,63 @@ def connected_components(coo: COO, max_iters: int = 512) -> CCResult:
     return CCResult(labels, it)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_nodes", "max_iters", "method", "bin_range", "num_bins", "block", "plan",
+    ),
+)
+def _cc_fused(src, dst, num_nodes, max_iters, method, bin_range, num_bins, block, plan):
+    """Label propagation where the per-iteration min-scatter runs as a
+    fused bin-and-accumulate sweep (DESIGN.md §8): min is commutative
+    (and idempotent), so the binned edge stream never hits HBM."""
+    from repro.core.executor import execute_reduce
+
+    labels0 = jnp.arange(num_nodes, dtype=jnp.int32)
+
+    def reduce_min(key, val):
+        return execute_reduce(
+            key, val, out_size=num_nodes, op="min", method=method,
+            bin_range=bin_range, num_bins=num_bins, plan=plan, block=block,
+        )
+
+    def cond(state):
+        labels, prev, it = state
+        return jnp.logical_and(jnp.any(labels != prev), it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        upd = jnp.minimum(
+            reduce_min(dst, jnp.take(labels, src)),
+            reduce_min(src, jnp.take(labels, dst)),
+        )
+        return jnp.minimum(labels, upd), labels, it + 1
+
+    init = (labels0, jnp.full_like(labels0, -1), jnp.int32(0))
+    labels, _, it = jax.lax.while_loop(cond, body, init)
+    return labels, it
+
+
+def connected_components_fused(
+    coo: COO, max_iters: int = 512, method: str | None = None
+) -> CCResult:
+    """CC through the executor's fused reduction: per-iteration min
+    labels are accumulated in one sweep of the edge stream (no binned
+    intermediate). ``method=None`` consults ``decide`` (reduce set)."""
+    from repro.core.executor import get_default_executor
+
+    ex = get_default_executor()
+    if method is None or method == "auto":
+        d = ex.decide(coo.num_nodes, coo.num_edges, jnp.int32, kind="reduce", op="min")
+    else:
+        d = ex._finalize(method, coo.num_nodes, None, "caller")
+    labels, it = _cc_fused(
+        coo.src, coo.dst, coo.num_nodes, max_iters, d.method, d.bin_range,
+        d.num_bins, ex.block, d.plan,
+    )
+    return CCResult(labels, it)
+
+
 def connected_components_pb(
     coo: COO, bin_range: int = 1 << 14, max_iters: int = 512,
     method: str | None = None,

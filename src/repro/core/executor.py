@@ -20,6 +20,12 @@ all register a *stream* and the executor picks the *method*:
   ``hierarchical``  — multi-pass COBRA (``core.cobra``), the §4 knob-free
                       execution driven by a ``CobraPlan``: used when one
                       pass's C-Buffer fan-out would exceed the fast level.
+  ``fused``         — (``reduce_stream`` only) single-sweep
+                      bin-and-accumulate (``kernels/fused.py``): C-Buffer
+                      flushes reduce into a VMEM-resident accumulator, so
+                      the binned stream never exists in HBM. Legal for
+                      commutative reductions whose accumulator fits the
+                      fast level (DESIGN.md §8).
 
 Selection is plan-driven (``HardwareModel`` capacities, paper §3's two
 optima) with an optional **measured autotuner**: timings are cached per
@@ -61,9 +67,24 @@ from repro.core.plan import (
 
 METHODS = ("sort", "counting", "pallas", "hierarchical")
 
+# Reduction entry point (``reduce_stream``): the four binning methods
+# run two-phase (bin, then Bin-Read reduce); ``fused`` is the
+# single-sweep bin-and-accumulate that never materializes the binned
+# stream in HBM (kernels/fused.py, DESIGN.md §8).
+REDUCE_METHODS = METHODS + ("fused",)
+
+# Commutative reductions the fused path may legally absorb on chip.
+# Anything else (neighbor placement, capacity-clipped dispatch, ...)
+# is order-sensitive and must keep the two-phase ``bin_stream`` path.
+REDUCE_OPS = ("add", "min")
+
 # Below this stream length XLA's stable sort is latency-, not
 # bandwidth-bound, and always wins (DESIGN.md §3.1).
 _SORT_THRESHOLD = 4096
+
+# decision_log is a bounded trace for BENCH_smoke.json, not an audit
+# trail: long-running consumers (training loops) must not leak memory.
+_DECISION_LOG_CAP = 512
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +148,157 @@ def execute_binning(
     if plan is None:
         raise ValueError("hierarchical binning needs a CobraPlan")
     return hierarchical_binning(indices, values, plan, method="counting", block=block)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-sweep reduction (DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+
+# The compiled Pallas fused kernel keeps the whole accumulator (plus
+# per-bin C-Buffer scratch) in VMEM; beyond these static bounds the
+# blockwise jnp sweep is the fused realization even on TPU — the same
+# fallback ``decide`` encodes via ``fused_fits`` (DESIGN.md §8.1), here
+# enforced for callers that hardcode method="fused".
+_FUSED_KERNEL_MAX_ACC_BYTES = 32 * 1024 * 1024
+_FUSED_KERNEL_MAX_BINS = 4096
+
+
+def _fused_reduce_jnp(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    out_size: int,
+    op: str,
+    block: int = 2048,
+    sorted_within: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fused fallback off-TPU: one blockwise sweep, each block
+    segment-reduced straight into the dense output (a ``lax.scan`` whose
+    carry IS the accumulator — the jnp rendering of the VMEM-resident
+    accumulator tile in kernels/fused.py). The binned intermediate is
+    never built. ``sorted_within <= 1`` hands XLA the elementwise
+    sortedness fact when the caller actually guarantees it.
+    """
+    m = indices.shape[0]
+    ident = pb.reduce_identity(op, values.dtype)
+    out0 = jnp.full((out_size,) + values.shape[1:], ident, values.dtype)
+    if m == 0:
+        return out0
+    srt = sorted_within is not None and sorted_within <= 1
+    nblocks = -(-m // block)
+    pad = nblocks * block - m
+    # padding indices routed out of bounds and dropped by the scatter
+    idx_p = jnp.pad(indices, (0, pad), constant_values=out_size).reshape(
+        nblocks, block
+    )
+    pad_width = [(0, pad)] + [(0, 0)] * (values.ndim - 1)
+    val_p = jnp.pad(values, pad_width, constant_values=0).reshape(
+        (nblocks, block) + values.shape[1:]
+    )
+
+    def step(out, blk):
+        ib, vb = blk
+        upd = out.at[ib]
+        if op == "add":
+            out = upd.add(vb, mode="drop", indices_are_sorted=srt)
+        else:
+            out = upd.min(vb, mode="drop", indices_are_sorted=srt)
+        return out, None
+
+    out, _ = jax.lax.scan(step, out0, (idx_p, val_p))
+    return out
+
+
+def execute_reduce(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    out_size: int,
+    op: str = "add",
+    method: str = "fused",
+    bin_range: Optional[int] = None,
+    num_bins: Optional[int] = None,
+    plan: Optional[CobraPlan] = None,
+    block: int = 2048,
+    interpret: Optional[bool] = None,
+    use_pallas: bool = False,
+    sorted_within: Optional[int] = None,
+) -> jnp.ndarray:
+    """Reduce one (indices, values) stream to a dense (out_size, ...) array.
+
+    The traceable core of ``PBExecutor.reduce_stream``. ``method`` is any
+    of ``REDUCE_METHODS``: the binning methods run the classic two-phase
+    pipeline (``execute_binning`` + ``pb.bin_read_reduce``); ``fused``
+    runs the single-sweep bin-and-accumulate — the Pallas C-Buffer kernel
+    when ``use_pallas`` is set or the backend compiles it (a real TPU:
+    ``interpret`` resolves False), and the blockwise jnp sweep otherwise. Only commutative ops are accepted: order-sensitive
+    consumers must use ``bin_stream`` (DESIGN.md §8).
+    """
+    if op not in REDUCE_OPS:
+        raise ValueError(
+            f"reduce_stream only serves commutative reductions {REDUCE_OPS}; "
+            f"got op={op!r}. Non-commutative consumers need the stable "
+            "two-phase path: bin_stream() + an order-aware Bin-Read."
+        )
+    if method not in REDUCE_METHODS:
+        raise ValueError(
+            f"unknown reduce method: {method!r} (want one of {REDUCE_METHODS})"
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if method == "fused":
+        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        # the Pallas kernel runs when explicitly requested OR compiled
+        # (non-interpret = a real TPU backend); CPU containers default to
+        # the jnp sweep, which is the faster interpret-mode realization
+        r = bin_range or max(1, min(512, out_size))
+        nb = num_bins or -(-out_size // r)
+        kernel_fits = flat and (
+            nb * r * jnp.dtype(values.dtype).itemsize <= _FUSED_KERNEL_MAX_ACC_BYTES
+            and nb <= _FUSED_KERNEL_MAX_BINS
+        )
+        if (use_pallas or not interpret) and kernel_fits and indices.shape[0] > 0:
+            from repro.kernels.fused import cobra_bin_accumulate_pallas
+
+            blk = min(block, 512)
+            return cobra_bin_accumulate_pallas(
+                indices,
+                values,
+                num_indices=out_size,
+                bin_range=r,
+                num_bins=nb,
+                op=op,
+                block=blk,
+                cap=512,  # >= blk by construction (kernel asserts)
+                interpret=interpret,
+            )
+        return _fused_reduce_jnp(
+            indices, values, out_size, op, block=block, sorted_within=sorted_within
+        )
+    r = bin_range or max(1, min(512, out_size))
+    nb = num_bins or -(-out_size // r)
+    bins = execute_binning(
+        indices,
+        values,
+        bin_range=r,
+        num_bins=nb,
+        method=method,
+        plan=plan,
+        block=block,
+        interpret=interpret,
+    )
+    if bins.idx.shape[0] == 0:
+        return jnp.full(
+            (out_size,) + values.shape[1:], pb.reduce_identity(op, values.dtype),
+            values.dtype,
+        )
+    # static order guarantee: binning leaves the stream bin-blocked at the
+    # effective range (bins.bin_range may be a tracer through inner jits)
+    eff_range = plan.final_bin_range if (method == "hierarchical" and plan) else r
+    sw = sorted_within if sorted_within is not None else eff_range
+    return pb.bin_read_reduce(
+        bins, out_size, op=op, out_dtype=values.dtype, sorted_within=sw
+    )
 
 
 class BatchedBins(NamedTuple):
@@ -341,6 +513,30 @@ def _jitted_binning(bin_range, num_bins, method, block, interpret, plan):
     return jax.jit(f)
 
 
+@functools.lru_cache(maxsize=256)
+def _jitted_reduce(
+    out_size, bin_range, num_bins, method, op, block, interpret, plan, use_pallas,
+    sorted_within,
+):
+    def f(idx, val):
+        return execute_reduce(
+            idx,
+            val,
+            out_size=out_size,
+            op=op,
+            method=method,
+            bin_range=bin_range,
+            num_bins=num_bins,
+            plan=plan,
+            block=block,
+            interpret=interpret,
+            use_pallas=use_pallas,
+            sorted_within=sorted_within,
+        )
+
+    return jax.jit(f)
+
+
 class PBExecutor:
     """Plan-driven (and optionally measured) PB execution.
 
@@ -368,26 +564,42 @@ class PBExecutor:
             interpret if interpret is not None else jax.default_backend() != "tpu"
         )
         self.cache = _AutotuneCache(cache_dir)
+        # every decide() appends here — benchmarks/run.py serializes it
+        # into BENCH_smoke.json so PRs have a method-decision trajectory
+        self.decision_log: list = []
 
     # -- decision ----------------------------------------------------------
 
     def _key(
-        self, num_indices: int, stream_len: int, dtype, bin_range: Optional[int] = None
+        self,
+        num_indices: int,
+        stream_len: int,
+        dtype,
+        bin_range: Optional[int] = None,
+        kind: str = "bin",
+        op: str = "add",
     ) -> str:
         # bin_range is part of the key: a method measured at one range is
         # not evidence about another (counting's cost is ~linear in the
-        # C-Buffer fan-out, i.e. in num_indices/bin_range).
+        # C-Buffer fan-out, i.e. in num_indices/bin_range). ``kind``
+        # separates reduction entries (the fused candidate exists there,
+        # dtype is the VALUE dtype, and the op shapes the apply cost)
+        # from pure binning entries in the persisted cache schema.
         base = (
             f"{num_indices}:{stream_len}:{jnp.dtype(dtype).name}:"
             f"{jax.default_backend()}"
         )
+        if kind != "bin":
+            base = f"{base}:{kind}:{op}"
         return f"{base}:r{bin_range}" if bin_range else base
 
-    def _candidates(self, flat_values: bool) -> Tuple[str, ...]:
+    def _candidates(self, flat_values: bool, kind: str = "bin") -> Tuple[str, ...]:
         c = ["sort", "counting"]
         if self.use_pallas and flat_values:
             c.append("pallas")
         c.append("hierarchical")
+        if kind == "reduce":
+            c.append("fused")
         return tuple(c)
 
     def _finalize(
@@ -421,6 +633,25 @@ class PBExecutor:
             return "pallas" if self.use_pallas else "counting"
         return "hierarchical"
 
+    def fused_fits(self, num_indices: int, value_bytes: int = 4) -> bool:
+        """Fusion legality, capacity half (DESIGN.md §8.1): the dense
+        accumulator (one output per index) must be resident in the fast
+        hierarchy alongside the C-Buffers — budget half of the largest
+        fast level (on TPU the only level: VMEM; on the modeled Xeon the
+        LLC, where the paper parks Bin-Read working sets)."""
+        return num_indices * value_bytes <= self.hw.fast_levels[-1] // 2
+
+    def analytic_reduce_method(
+        self, num_indices: int, stream_len: int, bin_range: Optional[int] = None
+    ) -> str:
+        """DESIGN.md §8: the fused single sweep strictly halves stream
+        bytes whenever its accumulator fits the fast level, so it wins
+        every bandwidth-bound case; oversized domains fall back to the
+        two-phase tree at §3.1."""
+        if self.fused_fits(num_indices):
+            return "fused"
+        return self.analytic_method(num_indices, stream_len, bin_range)
+
     def decide(
         self,
         num_indices: int,
@@ -429,34 +660,62 @@ class PBExecutor:
         *,
         bin_range: Optional[int] = None,
         flat_values: bool = True,
+        kind: str = "bin",
+        op: str = "add",
     ) -> BinningDecision:
         """Pick (method, bin_range, plan) for a stream shape.
 
         Priority: measured cache -> live autotune (if enabled) ->
-        in-repo fallback table -> analytic hardware model.
+        in-repo fallback table -> analytic hardware model. ``kind`` is
+        "bin" for stream binning or "reduce" for dense reductions, where
+        the fused single-sweep method joins the candidate set, ``dtype``
+        is the value dtype, and ``op`` keys the cache entry.
         """
-        key = self._key(num_indices, stream_len, dtype, bin_range)
+        key = self._key(num_indices, stream_len, dtype, bin_range, kind, op)
+        d = self._decide_uncached(
+            key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
+        )
+        if len(self.decision_log) < _DECISION_LOG_CAP:
+            self.decision_log.append(
+                {
+                    "kind": kind,
+                    "num_indices": num_indices,
+                    "stream_len": stream_len,
+                    "method": d.method,
+                    "bin_range": d.bin_range,
+                    "source": d.source,
+                }
+            )
+        return d
+
+    def _decide_uncached(
+        self, key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
+    ) -> BinningDecision:
         hit = self.cache.get(key)
-        if hit is not None and hit.get("method") in self._candidates(flat_values):
+        if hit is not None and hit.get("method") in self._candidates(flat_values, kind):
             return self._finalize(hit["method"], num_indices, bin_range, "cache")
         if self.autotune and stream_len > 0:
-            entry = self.measure_methods(num_indices, stream_len, dtype, bin_range, flat_values)
+            entry = self.measure_methods(
+                num_indices, stream_len, dtype, bin_range, flat_values, kind=kind,
+                op=op,
+            )
             self.cache.put(key, entry)
             return self._finalize(entry["method"], num_indices, bin_range, "autotuned")
         # The fallback table is bucketed on the *default* (compromise)
         # range; a caller-fixed range changes the fan-out, so skip the
         # table and evaluate the analytic tree at that range instead.
-        if bin_range is None:
+        # (Binning only: reduce decisions have no measured table yet.)
+        if bin_range is None and kind == "bin":
             tkey = (_bucket(num_indices), _bucket(stream_len))
             m = _FALLBACK_TABLE.get(tkey)
-            if m is not None and m in self._candidates(flat_values):
+            if m is not None and m in self._candidates(flat_values, kind):
                 return self._finalize(m, num_indices, bin_range, "fallback-table")
-        return self._finalize(
-            self.analytic_method(num_indices, stream_len, bin_range),
-            num_indices,
-            bin_range,
-            "analytic",
+        analytic = (
+            self.analytic_reduce_method(num_indices, stream_len, bin_range)
+            if kind == "reduce"
+            else self.analytic_method(num_indices, stream_len, bin_range)
         )
+        return self._finalize(analytic, num_indices, bin_range, "analytic")
 
     # -- autotune measurement ---------------------------------------------
 
@@ -468,22 +727,32 @@ class PBExecutor:
         bin_range=None,
         flat_values=True,
         reps: int = 3,
+        kind: str = "bin",
+        op: str = "add",
     ) -> dict:
         """Time every candidate method on a synthetic stream of this
         shape; returns ``{"method": best, "timings_us": {...}}``. The
         measured answer to the paper's §3 compromise — used by ``decide``
-        when autotuning and by benchmarks/executor_autotune.py."""
+        when autotuning and by benchmarks/executor_autotune.py.
+        ``kind="reduce"`` times the dense-reduction pipelines (including
+        the fused single sweep) instead of bare binning."""
         rng = np.random.default_rng(num_indices * 1_000_003 + stream_len)
         idx = jnp.asarray(
             rng.integers(0, max(1, num_indices), stream_len), jnp.int32
         )
         val = jnp.arange(stream_len, dtype=dtype)
         timings = {}
-        for method in self._candidates(flat_values):
+        for method in self._candidates(flat_values, kind):
             d = self._finalize(method, num_indices, bin_range, "probe")
-            fn = _jitted_binning(
-                d.bin_range, d.num_bins, method, self.block, self.interpret, d.plan
-            )
+            if kind == "reduce":
+                fn = _jitted_reduce(
+                    num_indices, d.bin_range, d.num_bins, method, op, self.block,
+                    self.interpret, d.plan, self.use_pallas, None,
+                )
+            else:
+                fn = _jitted_binning(
+                    d.bin_range, d.num_bins, method, self.block, self.interpret, d.plan
+                )
             try:
                 jax.block_until_ready(fn(idx, val))  # compile + warm
                 ts = []
@@ -559,6 +828,58 @@ class PBExecutor:
             block=self.block,
         )
 
+    def reduce_stream(
+        self,
+        indices: jnp.ndarray,
+        values: jnp.ndarray,
+        *,
+        out_size: int,
+        op: str = "add",
+        bin_range: Optional[int] = None,
+        method: Optional[str] = None,
+        sorted_within: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Reduce one commutative stream to a dense (out_size, ...) array.
+
+        The fifth method, ``fused``, is the single-sweep
+        bin-and-accumulate (kernels/fused.py) — no binned intermediate in
+        HBM, roughly half the stream bytes of the two-phase pipeline
+        (DESIGN.md §8). ``method=None``/"auto" consults ``decide`` with
+        the reduce candidate set; non-commutative ops are rejected (use
+        ``bin_stream``). ``sorted_within`` is the caller's true order
+        guarantee (1 = elementwise sorted indices).
+        """
+        if op not in REDUCE_OPS:
+            raise ValueError(
+                f"reduce_stream only serves commutative reductions {REDUCE_OPS}; "
+                f"got op={op!r}. Non-commutative consumers need the stable "
+                "two-phase path: bin_stream() + an order-aware Bin-Read."
+            )
+        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        if method in (None, "auto"):
+            vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
+            d = self.decide(
+                out_size,
+                int(indices.shape[0]),
+                vdtype,  # the VALUE dtype: it sizes the apply traffic
+                bin_range=bin_range,
+                flat_values=flat,
+                kind="reduce",
+                op=op,
+            )
+        else:
+            d = self._finalize(method, out_size, bin_range, "caller")
+        if not flat and d.method != "fused":
+            # the two-phase Bin-Read reduce handles row values too, but
+            # pallas binning is 1-D-only; route those to sort
+            if d.method == "pallas":
+                d = self._finalize("sort", out_size, bin_range, d.source)
+        fn = _jitted_reduce(
+            out_size, d.bin_range, d.num_bins, d.method, op, self.block,
+            self.interpret, d.plan, self.use_pallas, sorted_within,
+        )
+        return fn(indices, values)
+
     def scatter_add(
         self,
         indices: jnp.ndarray,
@@ -569,11 +890,17 @@ class PBExecutor:
         method: Optional[str] = None,
     ) -> jnp.ndarray:
         """Full PB scatter-add (Binning + commutative Bin-Read), the
-        paper's Fig. 1 pipeline for additive updates."""
-        b = self.bin_stream(
-            indices, values, num_indices=out_size, bin_range=bin_range, method=method
+        paper's Fig. 1 pipeline for additive updates. Routes through
+        ``reduce_stream`` so additive consumers get the fused single
+        sweep whenever ``decide`` picks it."""
+        return self.reduce_stream(
+            indices,
+            values,
+            out_size=out_size,
+            op="add",
+            bin_range=bin_range,
+            method=method,
         )
-        return pb.bin_read_scatter_add(b, out_size, out_dtype=values.dtype)
 
     def scatter_add_batched(
         self,

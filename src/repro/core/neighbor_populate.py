@@ -34,9 +34,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import execute_binning, get_default_executor
+from repro.core.executor import execute_binning, execute_reduce, get_default_executor
 from repro.core.graph import COO, CSR, degrees_from_coo, offsets_from_degrees
 from repro.core.plan import CobraPlan
+
+
+def _degrees_fused(src, num_nodes, block=2048):
+    """Degree counting IS a commutative PB reduction (add of ones), so it
+    runs on the fused single-sweep path (DESIGN.md §8). The neighbor
+    *placement* that follows is order-sensitive and stays two-phase."""
+    ones = jnp.ones(src.shape, jnp.int32)
+    return execute_reduce(
+        src, ones, out_size=num_nodes, op="add", method="fused", block=block
+    )
 
 
 def build_csr_oracle(coo: COO) -> CSR:
@@ -71,7 +81,7 @@ def build_csr_baseline(coo: COO) -> CSR:
     jax.jit, static_argnames=("num_nodes", "bin_range", "method", "block", "plan")
 )
 def _pb_build(src, dst, num_nodes, bin_range, method="sort", block=2048, plan=None):
-    degrees = jnp.bincount(src, length=num_nodes).astype(jnp.int32)
+    degrees = _degrees_fused(src, num_nodes, block=block)
     offsets = offsets_from_degrees(degrees)
     num_bins = -(-num_nodes // bin_range)
     # Phase 1: Binning (coarse range) through the shared executor core.

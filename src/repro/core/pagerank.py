@@ -138,3 +138,55 @@ def pagerank_pb(
     src_b, dst_b = pb_bin_edges(coo, bin_range)
     r = _pr_pb(src_b, dst_b, coo.num_nodes, iters, bin_range, coalesce)
     return PRResult(r, iters)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_nodes", "iters", "method", "bin_range", "num_bins", "block", "plan",
+    ),
+)
+def _pr_fused(src, dst, num_nodes, iters, method, bin_range, num_bins, block, plan=None):
+    """Fused PB push: every iteration bins AND accumulates contributions
+    in one sweep of the edge stream (DESIGN.md §8) — no pre-binned
+    (src, dst) copy is ever materialized, unlike ``_pr_pb``."""
+    from repro.core.executor import execute_reduce
+
+    n = num_nodes
+    outdeg = jnp.maximum(jnp.bincount(src, length=n), 1).astype(jnp.float32)
+    ranks = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+
+    def body(_, ranks):
+        contrib = ranks / outdeg
+        incoming = execute_reduce(
+            dst,
+            jnp.take(contrib, src),
+            out_size=n,
+            op="add",
+            method=method,
+            bin_range=bin_range,
+            num_bins=num_bins,
+            plan=plan,
+            block=block,
+        )
+        return (1.0 - DAMP) / n + DAMP * incoming
+
+    return jax.lax.fori_loop(0, iters, body, ranks)
+
+
+def pagerank_fused(coo: COO, iters: int = 10, method: str | None = None) -> PRResult:
+    """PageRank through the executor's fused reduction (DESIGN.md §8):
+    the commutative add lets each iteration's irregular update run as a
+    single bin-and-accumulate sweep. ``method=None`` asks ``decide``
+    (reduce candidate set); any ``REDUCE_METHODS`` entry forces a path.
+    """
+    ex = get_default_executor()
+    if method is None or method == "auto":
+        d = ex.decide(coo.num_nodes, coo.num_edges, jnp.float32, kind="reduce")
+    else:
+        d = ex._finalize(method, coo.num_nodes, None, "caller")
+    r = _pr_fused(
+        coo.src, coo.dst, coo.num_nodes, iters, d.method, d.bin_range,
+        d.num_bins, ex.block, d.plan,
+    )
+    return PRResult(r, iters)

@@ -53,6 +53,19 @@ def bin_ids(indices: jnp.ndarray, bin_range: int) -> jnp.ndarray:
     return (indices // bin_range).astype(jnp.int32)
 
 
+def reduce_identity(op: str, dtype) -> jnp.ndarray:
+    """Identity element of a commutative reduce op — what untouched
+    output indices hold. The single definition every reduce path
+    (executor fallback, fused kernel, Bin-Read, test oracle) shares."""
+    dt = jnp.dtype(dtype)
+    if op == "add":
+        return jnp.zeros((), dt)
+    if op == "min":
+        big = jnp.iinfo(dt).max if jnp.issubdtype(dt, jnp.integer) else jnp.finfo(dt).max
+        return jnp.array(big, dt)
+    raise ValueError(f"unknown reduce op: {op!r} (want 'add' or 'min')")
+
+
 def starts_from_counts(counts: jnp.ndarray) -> jnp.ndarray:
     z = jnp.zeros((1,), dtype=jnp.int32)
     return jnp.concatenate([z, jnp.cumsum(counts, dtype=jnp.int32)])
@@ -124,6 +137,16 @@ def counting_permutation(
     return dest, counts
 
 
+def inverse_permutation(dest: jnp.ndarray) -> jnp.ndarray:
+    """inv with inv[dest[i]] = i, via ONE int32 scatter (no argsort).
+
+    Turns every subsequent placement ``out[dest] = v`` into the gather
+    ``v[inv]`` — gathers need no zero-initialized destination, so the
+    dead memset per value leaf disappears from the counting path."""
+    m = dest.shape[0]
+    return jnp.zeros((m,), jnp.int32).at[dest].set(jnp.arange(m, dtype=jnp.int32))
+
+
 def binning_counting(
     indices: jnp.ndarray,
     values,
@@ -133,11 +156,10 @@ def binning_counting(
 ) -> Bins:
     bids = bin_ids(indices, bin_range)
     dest, counts = counting_permutation(bids, num_bins, block=block)
-    m = indices.shape[0]
+    inv = inverse_permutation(dest)
 
     def place(v):
-        out = jnp.zeros((m,) + v.shape[1:], dtype=v.dtype)
-        return out.at[dest].set(v)
+        return jnp.take(v, inv, axis=0)
 
     return Bins(
         idx=place(indices),
@@ -174,16 +196,45 @@ def segment_ids_from_starts(starts: jnp.ndarray, stream_len: int) -> jnp.ndarray
 
 
 def bin_read_scatter_add(
-    bins: Bins, out_size: int, out_dtype=jnp.float32
+    bins: Bins, out_size: int, out_dtype=jnp.float32, sorted_within: int | None = None
 ) -> jnp.ndarray:
     """Commutative Bin-Read: accumulate binned values into a dense output.
 
     Because the stream is sorted by bin (and bins are contiguous index
     ranges), the scatter walks the output nearly sequentially — the
-    locality PB buys. ``indices_are_sorted`` hands XLA the same fact.
+    locality PB buys. What binning actually guarantees is *bin-blocked*
+    order: indices sorted at granularity ``bin_range``, not elementwise —
+    so XLA's ``indices_are_sorted`` (a full-sortedness claim) is only
+    legal when the granularity is 1. ``sorted_within`` carries that true
+    guarantee: it defaults to ``bins.bin_range`` and a caller that knows
+    a tighter order (e.g. a stream pre-sorted by exact index) passes 1 to
+    hand XLA the fact when it actually holds.
     """
+    sw = bins.bin_range if sorted_within is None else sorted_within
     out = jnp.zeros((out_size,) + bins.val.shape[1:], dtype=out_dtype)
-    return out.at[bins.idx].add(bins.val.astype(out_dtype), indices_are_sorted=False)
+    return out.at[bins.idx].add(bins.val.astype(out_dtype), indices_are_sorted=sw <= 1)
+
+
+def bin_read_reduce(
+    bins: Bins,
+    out_size: int,
+    op: str = "add",
+    out_dtype=None,
+    sorted_within: int | None = None,
+) -> jnp.ndarray:
+    """Commutative Bin-Read for any supported reduction (add | min).
+
+    The two-phase counterpart of the fused single-sweep path
+    (``kernels/fused.py``): same result, one extra HBM round-trip for the
+    binned stream. Untouched indices hold the op's identity.
+    """
+    dt = jnp.dtype(out_dtype or bins.val.dtype)
+    sw = bins.bin_range if sorted_within is None else sorted_within
+    if op == "add":
+        return bin_read_scatter_add(bins, out_size, out_dtype=dt, sorted_within=sw)
+    ident = reduce_identity(op, dt)  # rejects unknown ops
+    out = jnp.full((out_size,) + bins.val.shape[1:], ident, dtype=dt)
+    return out.at[bins.idx].min(bins.val.astype(dt), indices_are_sorted=sw <= 1)
 
 
 @functools.partial(jax.jit, static_argnames=("out_size", "num_bins", "bin_range"))

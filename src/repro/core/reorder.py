@@ -25,8 +25,15 @@ from repro.core.plan import CobraPlan
 
 @functools.partial(jax.jit, static_argnames=("num_nodes",))
 def degree_sort_mapping(src, num_nodes) -> jnp.ndarray:
-    """new_id[old_id]: descending-degree relabelling (stable)."""
-    deg = jnp.bincount(src, length=num_nodes)
+    """new_id[old_id]: descending-degree relabelling (stable). The degree
+    histogram is a commutative add, so it runs on the executor's fused
+    single-sweep path (DESIGN.md §8)."""
+    from repro.core.executor import execute_reduce
+
+    deg = execute_reduce(
+        src, jnp.ones(src.shape, jnp.int32), out_size=num_nodes, op="add",
+        method="fused",
+    )
     order = jnp.argsort(-deg, stable=True)  # old ids in new order
     new_ids = jnp.zeros((num_nodes,), jnp.int32).at[order].set(
         jnp.arange(num_nodes, dtype=jnp.int32)

@@ -205,6 +205,71 @@ def pr_cobra_iter_seconds(m: int, plan: CobraPlan, hw: HardwareModel) -> float:
     return insert + binread_cost(m, plan.final_bin_range, hw).seconds(hw)
 
 
+# --- Fused single-sweep execution (DESIGN.md §8) -------------------------
+#
+# The fused bin-and-accumulate removes the materialized binned stream:
+# Binning's write sweep and Bin-Read's re-read sweep disappear, leaving
+# one stream read plus one dense accumulator write-back. These explicit
+# byte counters are the "traffic counters" fig6/fig5 report next to the
+# measured HLO bytes.
+
+
+def pb_two_phase_stream_bytes(
+    num_tuples: int,
+    num_indices: int,
+    tuple_bytes: int = TUPLE_BYTES,
+    value_bytes_per_index: int = 4,
+) -> float:
+    """Sequential HBM bytes of classic PB: Binning reads the stream and
+    writes the binned copy (2 sweeps), Bin-Read re-reads the copy (a 3rd
+    sweep) and writes the dense output once."""
+    return 3.0 * num_tuples * tuple_bytes + num_indices * value_bytes_per_index
+
+
+def fused_stream_bytes(
+    num_tuples: int,
+    num_indices: int,
+    tuple_bytes: int = TUPLE_BYTES,
+    value_bytes_per_index: int = 4,
+) -> float:
+    """Sequential HBM bytes of the fused sweep: read the stream once,
+    write the accumulator back once — no intermediate ever exists."""
+    return float(num_tuples) * tuple_bytes + num_indices * value_bytes_per_index
+
+
+def fused_cost(
+    num_tuples: int,
+    num_indices: int,
+    hw: HardwareModel,
+    tuple_bytes: int = TUPLE_BYTES,
+    value_bytes_per_index: int = 4,
+) -> PhaseCost:
+    """Fused bin-and-accumulate: one sequential sweep; every random
+    access lands in the fast-level-resident accumulator (the legality
+    condition ``PBExecutor.fused_fits`` enforces — C-Buffers share the
+    same budget), with the binning engine's fixed-function per-tuple cost
+    (COBRA's binupdate)."""
+    return PhaseCost(
+        stream_bytes=fused_stream_bytes(
+            num_tuples, num_indices, tuple_bytes, value_bytes_per_index
+        ),
+        random_accesses=float(num_tuples),
+        working_set=float(num_indices) * value_bytes_per_index,
+        core_ns_per_access=_COBRA_CORE_NS,
+    )
+
+
+def fused_seconds(num_tuples: int, num_indices: int, hw: HardwareModel) -> float:
+    return fused_cost(num_tuples, num_indices, hw).seconds(hw)
+
+
+def pr_fused_iter_seconds(m: int, n: int, hw: HardwareModel) -> float:
+    """PageRank iteration under the fused sweep (DESIGN.md §8):
+    contributions are produced sequentially and bin-accumulated in one
+    pass — no binned intermediate, no second sweep."""
+    return fused_cost(m, n, hw).seconds(hw)
+
+
 def pb_seconds(
     num_tuples: int, num_indices: int, bin_range: int, hw: HardwareModel
 ) -> float:

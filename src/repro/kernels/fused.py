@@ -1,0 +1,203 @@
+"""Fused single-sweep PB: bin-and-accumulate without the HBM intermediate.
+
+The two-phase pipeline (``kernels/binning.py`` + a Bin-Read scatter) pays
+two full HBM sweeps of the edge stream: Binning writes the reordered
+``(idx, val)`` tuples out, Bin-Read reads them back. For **commutative**
+reductions (add, min) the binned stream never needs to exist: the
+paper's C-Buffers can absorb the irregularity on chip and a buffer flush
+can *reduce* its tuples into a dense per-bin accumulator tile instead of
+appending them to an HBM bin. That is what ``cobra_bin_accumulate``
+does — COBRA's §4 eviction path with the binning engine's write
+retargeted at a ``(num_bins, bin_range)`` accumulator that stays in VMEM
+for the whole pass and is written back once (DESIGN.md §8).
+
+Structure (extending ``kernels/binning.py::_cobra_kernel``):
+
+  * per-bin C-Buffers (``cb_idx/cb_val``: num_bins x cap tuples) in VMEM
+    scratch collect incoming tuples exactly as in the two-phase kernel;
+  * a C-Buffer that would overflow is *flushed by reduction*: its tuples
+    are expanded into a ``(cap, bin_range)`` one-hot tile and reduced
+    along the lane axis into the bin's accumulator row — dense VPU/MXU
+    work, no HBM traffic;
+  * the output block's index map is constant, so the accumulator lives
+    in VMEM across every grid step and Pallas writes it to HBM once,
+    after the trailing drain step.
+
+Legality: the reduction operator must be commutative (tuples reach the
+accumulator in flush order, not stream order) and the accumulator —
+``num_bins * bin_range`` outputs — must fit the fast level. The executor
+checks both (``core/executor.py::PBExecutor.decide``, DESIGN.md §8).
+
+Validated with ``interpret=True`` against the dense scatter oracle
+(``kernels/ref.py::scatter_reduce_ref``); on a TPU backend the same call
+compiles the Mosaic kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# single shared definition of the op set and identities (core/pb.py)
+from repro.core.pb import reduce_identity  # noqa: E402
+
+_FUSED_OPS = ("add", "min")
+
+
+def _fused_kernel(
+    keys_ref,
+    idx_ref,
+    val_ref,
+    acc_ref,
+    len_ref,
+    cb_idx_ref,
+    cb_val_ref,
+    *,
+    num_bins: int,
+    bin_range: int,
+    cap: int,
+    nblocks: int,
+    op: str,
+):
+    step = pl.program_id(0)
+    ident = reduce_identity(op, acc_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        len_ref[...] = jnp.zeros_like(len_ref)
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+
+    lane = jnp.arange(cap, dtype=jnp.int32)
+
+    def flush_bin(b):
+        """Flush-by-reduction: evict C-Buffer b into its accumulator row.
+        The (cap, bin_range) one-hot expansion keeps the whole flush in
+        dense VPU/MXU ops; no HBM bin write happens."""
+        l = len_ref[b]
+        offs = cb_idx_ref[b, :] - b * bin_range
+        iota = jax.lax.broadcasted_iota(jnp.int32, (cap, bin_range), 1)
+        hit = jnp.logical_and(offs[:, None] == iota, (lane < l)[:, None])
+        vals = cb_val_ref[b, :][:, None]
+        if op == "add":
+            contrib = jnp.sum(jnp.where(hit, vals, 0), axis=0)
+            acc_ref[b, :] = acc_ref[b, :] + contrib.astype(acc_ref.dtype)
+        else:  # min
+            contrib = jnp.min(jnp.where(hit, vals, ident), axis=0)
+            acc_ref[b, :] = jnp.minimum(acc_ref[b, :], contrib.astype(acc_ref.dtype))
+        len_ref[b] = 0
+
+    @pl.when(step < nblocks)
+    def _process():
+        keys = keys_ref[...]
+        idx = idx_ref[...]
+        val = val_ref[...]
+        block = keys.shape[0]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (block, num_bins), 1)
+        onehot = (keys[:, None] == iota).astype(jnp.int32)
+        incoming = jnp.sum(onehot, axis=0)  # (B,)
+        ranks = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+
+        # 1) flush-by-reduction any C-Buffer the block would overflow
+        need = jnp.logical_and(len_ref[...] + incoming > cap, len_ref[...] > 0)
+
+        def maybe_flush(b, _):
+            jax.lax.cond(need[b], lambda: flush_bin(b), lambda: None)
+            return 0
+
+        jax.lax.fori_loop(0, num_bins, maybe_flush, 0)
+
+        # 2) append the block's tuples into their C-Buffers
+        lens_now = len_ref[...]
+
+        def append(i, _):
+            k = keys[i]
+
+            def do():
+                slot = lens_now[k] + ranks[i]
+                cb_idx_ref[k, slot] = idx[i]
+                cb_val_ref[k, slot] = val[i]
+
+            jax.lax.cond(k < num_bins, do, lambda: None)
+            return 0
+
+        jax.lax.fori_loop(0, block, append, 0)
+        len_ref[...] = lens_now + incoming
+
+    @pl.when(step == nblocks)
+    def _drain():
+        def drain(b, _):
+            flush_bin(b)
+            return 0
+
+        jax.lax.fori_loop(0, num_bins, drain, 0)
+
+
+def cobra_bin_accumulate_pallas(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    num_indices: int,
+    bin_range: int,
+    num_bins: int,
+    op: str = "add",
+    block: int = 512,
+    cap: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused bin-and-accumulate in ONE sweep of the (idx, val) stream.
+
+    Returns the dense ``(num_indices,)`` reduction (``op`` in
+    {"add", "min"}) with ``reduce_identity(op, val.dtype)`` at untouched
+    indices. Equivalent to ``kernels/ref.py::scatter_reduce_ref`` but the
+    reordered tuple stream is never materialized in HBM: C-Buffer
+    flushes reduce directly into the VMEM-resident accumulator.
+    """
+    if op not in _FUSED_OPS:
+        raise ValueError(f"fused accumulate needs a commutative op, got {op!r}")
+    assert cap >= block, "C-Buffer capacity must cover one block"
+    assert num_bins * bin_range >= num_indices, "accumulator must cover the domain"
+    m = idx.shape[0]
+    ident = reduce_identity(op, val.dtype)
+    if m == 0:
+        return jnp.full((num_indices,), ident, val.dtype)
+    keys = (idx // bin_range).astype(jnp.int32)
+    pad = (-m) % block
+    keys_p = jnp.pad(keys, (0, pad), constant_values=num_bins)
+    idx_p = jnp.pad(idx, (0, pad))
+    val_p = jnp.pad(val, (0, pad))
+    nblocks = keys_p.shape[0] // block
+    grid = (nblocks + 1,)  # +1 drain step
+
+    def in_map(i):
+        return (jnp.minimum(i, nblocks - 1),)
+
+    acc = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            num_bins=num_bins,
+            bin_range=bin_range,
+            cap=cap,
+            nblocks=nblocks,
+            op=op,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), in_map),
+            pl.BlockSpec((block,), in_map),
+            pl.BlockSpec((block,), in_map),
+        ],
+        # constant index map: the accumulator stays VMEM-resident across
+        # all grid steps and is written back to HBM once at the end
+        out_specs=pl.BlockSpec((num_bins, bin_range), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_bins, bin_range), val.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((num_bins,), jnp.int32),  # fill levels (SMEM on real TPU)
+            pltpu.VMEM((num_bins, cap), jnp.int32),  # C-Buffer idx
+            pltpu.VMEM((num_bins, cap), val.dtype),  # C-Buffer val
+        ],
+        interpret=interpret,
+    )(keys_p, idx_p, val_p)
+    return acc.reshape(num_bins * bin_range)[:num_indices]

@@ -42,6 +42,18 @@ def binread_scatter_add_ref(idx_padded, val_padded, bin_range):
     return out.at[safe].add(flat_val, mode="drop")
 
 
+def scatter_reduce_ref(idx, val, num_indices, op="add"):
+    """Dense commutative scatter-reduce: the oracle for the fused
+    single-sweep path (kernels/fused.py and the executor's
+    ``reduce_stream``). Untouched indices hold the op's identity."""
+    from repro.core.pb import reduce_identity
+
+    out = jnp.full(
+        (num_indices,) + val.shape[1:], reduce_identity(op, val.dtype), val.dtype
+    )
+    return out.at[idx].add(val) if op == "add" else out.at[idx].min(val)
+
+
 def scatter_rows_ref(x, pos, out_rows):
     out = jnp.zeros((out_rows, x.shape[1]), x.dtype)
     safe = jnp.where(pos >= 0, pos, out_rows)  # dropped via OOB

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 
-from repro.core.executor import dispatch_permutation
+from repro.core.executor import dispatch_permutation, execute_reduce
 from repro.distributed import sharding as shd
 from repro.models.config import ModelConfig
 from repro.models import params as pp
@@ -340,13 +340,12 @@ def _pb_take_bwd(res, g):
     vocab, dt = token.shape[0], token.dtype
     flat_ids = ids.reshape(-1)
     flat_g = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    # PB backward: stable sort by id (Binning), sorted coalesced scatter
-    # (Bin-Read) — the commutative-PB embedding-gradient integration.
-    order = jnp.argsort(flat_ids, stable=True)
-    ids_s = jnp.take(flat_ids, order)
-    g_s = jnp.take(flat_g, order, axis=0)
-    dtable = jnp.zeros((vocab, g.shape[-1]), jnp.float32)
-    dtable = dtable.at[ids_s].add(g_s, indices_are_sorted=True)
+    # Embedding backward is a commutative scatter-add over the vocab —
+    # the canonical fused PB stream (DESIGN.md §8): bin-and-accumulate in
+    # ONE sweep, no sorted gradient copy materialized.
+    dtable = execute_reduce(
+        flat_ids, flat_g, out_size=vocab, op="add", method="fused"
+    )
     return dtable.astype(dt), None
 
 
@@ -455,8 +454,19 @@ def _moe_expert_shard(x2d, wr, w1, w3, w2, cfg: ModelConfig, e_start, E_local):
     rows = jnp.take(yb, safe, axis=0)
     rows = jnp.where((slot_of_assign >= 0)[:, None], rows, 0)
     w = gate_w.reshape(-1).astype(dt)
-    out = jnp.zeros((T, d), dt).at[jnp.arange(T, dtype=jnp.int32).repeat(k)].add(
-        rows * w[:, None]
+    # combine = commutative add of k rows per token: the fused
+    # single-sweep reduction (DESIGN.md §8). The assignment stream is in
+    # token order (arange.repeat), i.e. elementwise-sorted indices —
+    # sorted_within=1 hands XLA that fact; block=T*k makes the sweep a
+    # single unpadded segment-reduce (no scan carry in the hot path).
+    out = execute_reduce(
+        jnp.arange(T, dtype=jnp.int32).repeat(k),
+        rows * w[:, None],
+        out_size=T,
+        op="add",
+        method="fused",
+        sorted_within=1,
+        block=T * k,
     )
     return out
 
@@ -525,9 +535,17 @@ def _moe_weight_stationary(p, x, cfg: ModelConfig, mesh):
         rows = jnp.take(yb, safe, axis=0)
         rows = jnp.where((slot_of >= 0)[:, None], rows, 0)
         w_g = gate_w.reshape(-1).astype(dt)
-        out = jnp.zeros((T, yb.shape[1]), dt).at[
-            jnp.arange(T, dtype=jnp.int32).repeat(k)
-        ].add(rows * w_g[:, None])
+        # fused single-sweep combine (DESIGN.md §8), token-sorted stream,
+        # block=T*k: one unpadded segment-reduce, no scan carry
+        out = execute_reduce(
+            jnp.arange(T, dtype=jnp.int32).repeat(k),
+            rows * w_g[:, None],
+            out_size=T,
+            op="add",
+            method="fused",
+            sorted_within=1,
+            block=T * k,
+        )
         out = jax.lax.psum(out, "model")  # sum expert-shard contributions
         return out.reshape(B, S, -1)
 

@@ -164,6 +164,77 @@ class Roofline:
         }
 
 
+# ---------------------------------------------------------------------------
+# PB stream traffic on the roofline (DESIGN.md §8).
+# ---------------------------------------------------------------------------
+
+
+def hlo_bytes_accessed(fn, *args) -> float:
+    """Measured bytes of one jitted call, from compiled-HLO cost
+    analysis (the counter fig5/fig6 report next to the modeled traffic).
+    NaN when the backend provides no cost analysis."""
+    import jax
+
+    from repro.compat import cost_analysis
+
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        return float(cost_analysis(compiled).get("bytes accessed", float("nan")))
+    except Exception:
+        return float("nan")
+
+
+@dataclass(frozen=True)
+class PBStreamRoofline:
+    """HBM-roofline view of one irregular update stream, two-phase vs
+    fused execution (DESIGN.md §8).
+
+    Two-phase PB moves the tuple stream three times (Binning read+write,
+    Bin-Read re-read) plus the dense output; the fused sweep moves it
+    once plus the output. At a fixed HBM bandwidth the byte ratio IS the
+    bandwidth-bound speedup ceiling, which is what makes the fused
+    column's sub-2x measured gains interpretable.
+    """
+
+    num_tuples: int
+    num_indices: int
+    tuple_bytes: int = 8
+    value_bytes: int = 4
+    hbm_bw: float = 819e9
+
+    @property
+    def two_phase_bytes(self) -> float:
+        from repro.core.traffic import pb_two_phase_stream_bytes
+
+        return pb_two_phase_stream_bytes(
+            self.num_tuples, self.num_indices, self.tuple_bytes, self.value_bytes
+        )
+
+    @property
+    def fused_bytes(self) -> float:
+        from repro.core.traffic import fused_stream_bytes
+
+        return fused_stream_bytes(
+            self.num_tuples, self.num_indices, self.tuple_bytes, self.value_bytes
+        )
+
+    @property
+    def bytes_saved_frac(self) -> float:
+        return 1.0 - self.fused_bytes / self.two_phase_bytes
+
+    @property
+    def t_two_phase(self) -> float:
+        return self.two_phase_bytes / self.hbm_bw
+
+    @property
+    def t_fused(self) -> float:
+        return self.fused_bytes / self.hbm_bw
+
+    @property
+    def speedup_ceiling(self) -> float:
+        return self.two_phase_bytes / self.fused_bytes
+
+
 def extrapolate(c_a: CellCost, c_b: CellCost, num_layers: int) -> CellCost:
     dl = c_b.num_layers - c_a.num_layers
     assert dl > 0

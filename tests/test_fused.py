@@ -1,0 +1,243 @@
+"""Fused single-sweep PB (DESIGN.md §8): kernel + executor equivalence
+against kernels/ref.py, consumer end-to-end agreement, the commutativity
+guard, and the graph/npz cache."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PBExecutor,
+    REDUCE_METHODS,
+    connected_components,
+    connected_components_fused,
+    graph_suite,
+    pagerank_coo_scatter,
+    pagerank_fused,
+)
+from repro.core import pb as pb_core
+from repro.kernels import ref
+from repro.kernels.fused import cobra_bin_accumulate_pallas, reduce_identity
+
+
+def _random_stream(n, m, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        val = jnp.asarray(rng.integers(-50, 50, m), dtype)
+    else:
+        val = jnp.asarray(rng.normal(size=m), dtype)
+    return idx, val
+
+
+def _assert_reduce(got, idx, val, n, op="add"):
+    want = ref.scatter_reduce_ref(idx, val, n, op=op)
+    if jnp.issubdtype(val.dtype, jnp.integer):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# -- the Pallas kernel (interpret mode) ------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("op", ["add", "min"])
+def test_fused_kernel_matches_scatter_ref(dtype, op):
+    """cobra_bin_accumulate == dense scatter-reduce, with the binned
+    stream never materialized (float32/int32, add/min)."""
+    n = 777  # non-pow2: ragged final bin
+    idx, val = _random_stream(n, 3001, seed=1, dtype=dtype)
+    got = cobra_bin_accumulate_pallas(
+        idx, val, num_indices=n, bin_range=100, num_bins=8, op=op,
+        block=256, cap=512, interpret=True,
+    )
+    _assert_reduce(got, idx, val, n, op=op)
+
+
+def test_fused_kernel_single_bin_and_empty():
+    n = 50
+    idx, val = _random_stream(n, 400, seed=3)
+    got = cobra_bin_accumulate_pallas(
+        idx, val, num_indices=n, bin_range=n, num_bins=1, block=128, cap=512,
+    )
+    _assert_reduce(got, idx, val, n)
+    empty = cobra_bin_accumulate_pallas(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32),
+        num_indices=10, bin_range=5, num_bins=2,
+    )
+    assert empty.shape == (10,) and float(jnp.abs(empty).sum()) == 0.0
+
+
+def test_fused_kernel_rejects_non_commutative_op():
+    with pytest.raises(ValueError, match="commutative"):
+        cobra_bin_accumulate_pallas(
+            jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.float32),
+            num_indices=4, bin_range=2, num_bins=2, op="concat",
+        )
+
+
+def test_reduce_identity_values():
+    assert float(reduce_identity("add", jnp.float32)) == 0.0
+    assert int(reduce_identity("min", jnp.int32)) == np.iinfo(np.int32).max
+
+
+# -- the executor reduce_stream path ---------------------------------------
+
+
+@pytest.mark.parametrize("method", REDUCE_METHODS)
+def test_reduce_stream_all_methods_match_ref(method):
+    """Every reduce method — the four two-phase pipelines and the fused
+    single sweep — produces the identical dense reduction."""
+    ex = PBExecutor()
+    for seed, (n, m, r) in enumerate(
+        [(200, 300, 7), (1000, 5000, 64), (513, 2000, 32)]
+    ):
+        idx, val = _random_stream(n, m, seed)
+        got = ex.reduce_stream(idx, val, out_size=n, bin_range=r, method=method)
+        _assert_reduce(got, idx, val, n)
+
+
+@pytest.mark.parametrize("method", REDUCE_METHODS)
+def test_reduce_stream_empty(method):
+    ex = PBExecutor()
+    got = ex.reduce_stream(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32),
+        out_size=100, bin_range=10, method=method,
+    )
+    assert got.shape == (100,) and float(jnp.abs(got).sum()) == 0.0
+
+
+@pytest.mark.parametrize("method", REDUCE_METHODS)
+def test_reduce_stream_single_bin_and_non_pow2(method):
+    ex = PBExecutor()
+    idx, val = _random_stream(50, 400, seed=3)
+    got = ex.reduce_stream(idx, val, out_size=50, bin_range=50, method=method)
+    _assert_reduce(got, idx, val, 50)
+    n = 777
+    idx, val = _random_stream(n, 3001, seed=5)
+    got = ex.reduce_stream(idx, val, out_size=n, bin_range=100, method=method)
+    _assert_reduce(got, idx, val, n)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_reduce_stream_dtypes(dtype):
+    ex = PBExecutor()
+    idx, val = _random_stream(400, 2000, seed=7, dtype=dtype)
+    for method in ("fused", "counting"):
+        got = ex.reduce_stream(idx, val, out_size=400, bin_range=32, method=method)
+        assert got.dtype == jnp.dtype(dtype)
+        _assert_reduce(got, idx, val, 400)
+
+
+def test_reduce_stream_min_and_auto():
+    ex = PBExecutor()
+    idx, val = _random_stream(300, 4000, seed=9, dtype=jnp.int32)
+    got = ex.reduce_stream(idx, val, out_size=300, op="min")  # auto decide
+    _assert_reduce(got, idx, val, 300, op="min")
+    d = ex.decide(300, 4000, kind="reduce")
+    assert d.method in REDUCE_METHODS
+
+
+def test_reduce_stream_rejects_non_commutative():
+    """Order-sensitive consumers (neighbor placement, capacity clipping)
+    must not slip onto the fused path: reduce_stream rejects anything
+    outside the commutative op set."""
+    ex = PBExecutor()
+    idx, val = _random_stream(10, 20)
+    for op in ("append", "set", "first", "concat"):
+        with pytest.raises(ValueError, match="commutative"):
+            ex.reduce_stream(idx, val, out_size=10, op=op)
+
+
+def test_reduce_stream_smoke_suite_equivalence():
+    """Fused == two-phase == dense scatter across the 5-graph smoke
+    suite (degree-weighted contributions, the PageRank-shaped stream)."""
+    ex = PBExecutor()
+    for name, g in graph_suite("smoke").items():
+        vals = jnp.ones((g.num_edges,), jnp.float32)
+        want = ref.scatter_reduce_ref(g.dst, vals, g.num_nodes)
+        for method in ("fused", "counting", "sort"):
+            got = ex.reduce_stream(
+                g.dst, vals, out_size=g.num_nodes, bin_range=64, method=method
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=1e-3, err_msg=f"{name}/{method}"
+            )
+
+
+def test_reduce_decisions_cached_separately_from_binning():
+    """Reduce entries participate in the persisted cache schema under
+    their own keys — a binning decision is not evidence for a reduction."""
+    ex = PBExecutor()
+    assert ex._key(100, 200, jnp.int32, kind="reduce") != ex._key(
+        100, 200, jnp.int32, kind="bin"
+    )
+    d = ex.decide(1 << 10, 1 << 13, kind="reduce")
+    assert d.method == "fused"  # accumulator fits the fast level
+    big = ex.decide(1 << 26, 1 << 13, kind="reduce")
+    assert big.method != "fused"  # accumulator exceeds the fast level
+
+
+# -- sorted_within hint (satellite: the indices_are_sorted fix) ------------
+
+
+def test_bin_read_sorted_within_hint():
+    """bin_range==1 means the binned stream is elementwise sorted — the
+    only case where XLA's indices_are_sorted claim is true; results must
+    agree either way."""
+    idx, val = _random_stream(64, 500, seed=11)
+    b1 = pb_core.binning_sort(idx, val, 1, 64)
+    out1 = pb_core.bin_read_scatter_add(b1, 64)  # sorted_within=1 implied
+    b8 = pb_core.binning_sort(idx, val, 8, 8)
+    out8 = pb_core.bin_read_scatter_add(b8, 64)  # bin-blocked only
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out8), atol=1e-4)
+    _assert_reduce(out1, idx, val, 64)
+
+
+# -- consumers -------------------------------------------------------------
+
+
+def test_pagerank_fused_matches_scatter():
+    g = graph_suite("smoke")["KRON"]
+    a = pagerank_coo_scatter(g, iters=5).ranks
+    for method in (None, "fused", "counting"):
+        b = pagerank_fused(g, iters=5, method=method).ranks
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-8)
+
+
+def test_components_fused_matches_baseline():
+    g = graph_suite("smoke")["EURO"]
+    a = connected_components(g, max_iters=128)
+    b = connected_components_fused(g, max_iters=128)
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+# -- graph cache (satellite) -----------------------------------------------
+
+
+def test_cached_graph_roundtrip(tmp_path, monkeypatch):
+    from repro.core.graph import cached_graph, gen_uniform
+
+    monkeypatch.setenv("REPRO_PB_CACHE_DIR", str(tmp_path))
+    calls = []
+
+    def make():
+        calls.append(1)
+        return gen_uniform(256, 4, seed=13)
+
+    g1 = cached_graph("uniform_t13_v1", make)
+    g2 = cached_graph("uniform_t13_v1", make)
+    assert len(calls) == 1  # second call served from npz
+    np.testing.assert_array_equal(np.asarray(g1.src), np.asarray(g2.src))
+    np.testing.assert_array_equal(np.asarray(g1.dst), np.asarray(g2.dst))
+    assert g1.num_nodes == g2.num_nodes
+
+
+def test_cached_graph_unwritable_dir_degrades(tmp_path, monkeypatch):
+    blocker = tmp_path / "occupied"
+    blocker.write_text("not a dir")
+    monkeypatch.setenv("REPRO_PB_CACHE_DIR", str(blocker))
+    from repro.core.graph import cached_graph, gen_uniform
+
+    g = cached_graph("uniform_t17_v1", lambda: gen_uniform(128, 2, seed=17))
+    assert g.num_edges == 256  # generation still works, cache silently off
