@@ -22,16 +22,20 @@ MODULES = [
     "benchmarks.fig3_binrange",
     "benchmarks.fig5_end2end",
     "benchmarks.fig6_breakdown",
+    "benchmarks.fig7_scaling",
     "benchmarks.moe_dispatch",
     "benchmarks.embed_grad",
     "benchmarks.executor_autotune",
 ]
 
 # Fast, representative subset: one paper table, the executor's own
-# selection bench, and one framework-integration stream.
+# selection bench, one framework-integration stream, and the sharded
+# scaling sweep (it forces its own 8-device subprocess, so it runs
+# anywhere).
 SMOKE_MODULES = [
     "benchmarks.table1_pb_speedup",
     "benchmarks.fig6_breakdown",
+    "benchmarks.fig7_scaling",
     "benchmarks.executor_autotune",
     "benchmarks.moe_dispatch",
 ]
@@ -48,10 +52,21 @@ def _write_smoke_json(all_rows, module_secs) -> None:
     for row in all_rows:
         name, us, derived = row.split(",", 2)
         parsed.append({"name": name, "us_per_call": float(us), "derived": derived})
+    # Device topology makes bench trajectories comparable across PRs: a
+    # timing measured on 1 CPU device is not evidence about an 8-device
+    # mesh (the same reason PBExecutor._key carries the topology).
     blob = {
         "version": 1,
         "scale": os.environ.get("BENCH_SCALE", "small"),
         "backend": jax.default_backend(),
+        "topology": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "local_device_count": jax.local_device_count(),
+            "device_kind": jax.devices()[0].device_kind,
+            "stream_mesh_shape": {"shard": jax.device_count()},
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        },
         "rows": parsed,
         "decisions": get_default_executor().decision_log,
         "module_seconds": module_secs,

@@ -1,6 +1,15 @@
 """Core: the paper's contribution (Propagation Blocking + COBRA) in JAX."""
 from repro.core.cobra import cobra_scatter_add, hierarchical_binning
-from repro.core.components import connected_components, connected_components_fused
+from repro.core.components import (
+    connected_components,
+    connected_components_fused,
+    connected_components_sharded,
+)
+from repro.core.distributed_pb import (
+    make_stream_mesh,
+    shard_build_csr,
+    shard_reduce_stream,
+)
 from repro.core.executor import (
     BatchedBins,
     BinningDecision,
@@ -25,12 +34,14 @@ from repro.core.neighbor_populate import (
     build_csr_cobra,
     build_csr_oracle,
     build_csr_pb,
+    build_csr_sharded,
 )
 from repro.core.pagerank import (
     pagerank_coo_scatter,
     pagerank_csr_pull,
     pagerank_fused,
     pagerank_pb,
+    pagerank_sharded,
 )
 from repro.core.pb import Bins, binning, binning_counting, binning_sort
 from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
@@ -52,11 +63,13 @@ __all__ = [
     "build_csr_cobra",
     "build_csr_oracle",
     "build_csr_pb",
+    "build_csr_sharded",
     "REDUCE_METHODS",
     "cobra_scatter_add",
     "compromise_bin_range",
     "connected_components",
     "connected_components_fused",
+    "connected_components_sharded",
     "degrees_from_coo",
     "dispatch_permutation",
     "execute_binning",
@@ -65,12 +78,16 @@ __all__ = [
     "set_default_executor",
     "graph_suite",
     "hierarchical_binning",
+    "make_stream_mesh",
     "offsets_from_degrees",
     "pagerank_coo_scatter",
     "pagerank_csr_pull",
     "pagerank_fused",
     "pagerank_pb",
+    "pagerank_sharded",
     "pb_scatter_add",
+    "shard_build_csr",
+    "shard_reduce_stream",
     "scatter_add_baseline",
     "transpose_coo",
 ]

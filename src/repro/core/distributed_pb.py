@@ -1,0 +1,358 @@
+"""Mesh-sharded PB reduction — the interconnect as the top C-Buffer level.
+
+COBRA's contribution is a *hierarchy* of C-Buffer levels, each sized to
+one tier of the memory system (paper §4). DESIGN.md §2 realizes that
+hierarchy in time as VMEM-bounded radix passes on one chip; this module
+extends it one level *up* (DESIGN.md §9): the coarsest bin of a tuple is
+the device that owns its output index, and the eviction path of that
+level is the interconnect, not HBM. Concretely, ``shard_reduce_stream``
+runs, per device of a 1-D mesh:
+
+  1. **owner histogram + stable local partition** — each device bins its
+     stream shard by owner shard (``index // shard_range``) with the
+     same stable counting sort every other binning path uses
+     (``pb.counting_permutation``), so in-shard stream order survives;
+  2. **capacity-padded all_to_all** — per-destination segments are
+     padded to a fixed capacity (static shapes; ragged exchange is not
+     expressible in XLA) and exchanged in one collective. Padding slots
+     carry the sentinel index ``out_size`` and the op identity, so they
+     are dropped by construction downstream;
+  3. **device-local fused reduce** — the received stream, now entirely
+     owned by this device's index range, runs through the existing
+     single-sweep bin-and-accumulate (``execute_reduce``, DESIGN.md §8)
+     over the ``shard_range``-sized local domain. Every finer C-Buffer
+     level stays device-local, exactly as on one chip.
+
+Stability across the shard boundary: ``all_to_all`` concatenates
+received segments in source-device order, source devices hold contiguous
+chunks of the global stream, and the local partition is stable — so the
+tuples a device receives arrive in global stream order. Non-commutative
+consumers (``shard_build_csr``) therefore reproduce the single-device
+stable binning semantics exactly.
+
+With one device (or ``mesh=None``) every entry point falls back to the
+single-device path unchanged — bit-stable with ``execute_reduce``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import pb
+from repro.core.executor import REDUCE_OPS, execute_reduce
+from repro.core.graph import COO, CSR, offsets_from_degrees
+
+# Default mesh axis name for stream sharding. One logical axis: the
+# device level of the hierarchy is 1-D (a tuple has ONE owner device).
+STREAM_AXIS = "shard"
+
+
+def make_stream_mesh(num_devices: Optional[int] = None, axis_name: str = STREAM_AXIS) -> Mesh:
+    """A 1-D mesh over the first ``num_devices`` local devices (all by
+    default) — the device level of the C-Buffer hierarchy."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else num_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"need 1..{len(devs)} devices, got {n}")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
+
+
+def resolve_stream_axis(mesh: Mesh, axis_name: Optional[str] = None) -> str:
+    """The mesh axis tuples shard over: explicit, else ``shard`` when
+    present, else the (only) axis of a 1-D mesh."""
+    if axis_name is not None:
+        if axis_name not in mesh.shape:
+            raise ValueError(f"axis {axis_name!r} not in mesh axes {tuple(mesh.shape)}")
+        return axis_name
+    if STREAM_AXIS in mesh.shape:
+        return STREAM_AXIS
+    if len(mesh.shape) == 1:
+        return next(iter(mesh.shape))
+    raise ValueError(
+        f"ambiguous stream axis for mesh axes {tuple(mesh.shape)}; pass axis_name"
+    )
+
+
+def shard_range_for(out_size: int, n_dev: int) -> int:
+    """Indices per owner shard (the coarsest bin range). The last shard
+    may own a short range when ``out_size % n_dev != 0``; empty shards
+    (``out_size < n_dev``) own nothing and only forward identities."""
+    return max(1, -(-out_size // n_dev))
+
+
+def _pad_to_multiple(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
+    padn = (-x.shape[0]) % mult
+    if padn == 0:
+        return x
+    width = [(0, padn)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width, constant_values=fill)
+
+
+def owner_exchange(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    out_size: int,
+    shard_range: int,
+    n_dev: int,
+    axis_name: str,
+    capacity: int,
+    block: int = 2048,
+    fill_val=0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The device level of the binning hierarchy, traced inside shard_map.
+
+    ``idx`` is this device's (m_local,) shard of global indices (sentinel
+    ``out_size`` marks padding); ``val`` its values, 1-D or row-valued.
+    Returns ``(local_idx, val)`` of length ``n_dev * capacity``: the
+    tuples owned by this device, indices rebased to the local range, with
+    every padding/foreign slot rebased to the sentinel ``shard_range``
+    (dropped by any local reduce/binning over the local domain).
+
+    ``capacity`` is the per-destination segment size of the padded
+    exchange; it must cover the largest (source, destination) tuple
+    count or tuples are silently dropped — callers default to the
+    always-safe ``m_local`` (DESIGN.md §9 discusses the trade-off).
+    """
+    m_local = idx.shape[0]
+    valid = idx < out_size
+    # padding routes to overflow bin n_dev; counting sort keeps it last
+    owner = jnp.where(valid, idx // shard_range, n_dev).astype(jnp.int32)
+    dest, counts = pb.counting_permutation(owner, n_dev + 1, block=block)
+    inv = pb.inverse_permutation(dest)
+    idx_s = jnp.take(idx, inv)
+    val_s = jnp.take(val, inv, axis=0)
+    starts = pb.starts_from_counts(counts)  # (n_dev+2,)
+
+    # pack per-destination segments into fixed (n_dev, capacity) rows
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    pos = starts[:n_dev, None] + j[None, :]  # (n_dev, cap)
+    in_seg = j[None, :] < counts[:n_dev, None]
+    posc = jnp.minimum(pos, m_local - 1).reshape(-1)
+    send_idx = jnp.where(
+        in_seg, jnp.take(idx_s, posc).reshape(n_dev, capacity), out_size
+    )
+    vseg = jnp.take(val_s, posc, axis=0).reshape((n_dev, capacity) + val.shape[1:])
+    mask = in_seg.reshape((n_dev, capacity) + (1,) * (val.ndim - 1))
+    send_val = jnp.where(mask, vseg, jnp.asarray(fill_val, val.dtype))
+
+    # one collective: row d of the send buffer becomes row (this device)
+    # of device d's receive buffer — the interconnect eviction path
+    recv_idx = jax.lax.all_to_all(send_idx, axis_name, split_axis=0, concat_axis=0)
+    recv_val = jax.lax.all_to_all(send_val, axis_name, split_axis=0, concat_axis=0)
+
+    shard = jax.lax.axis_index(axis_name)
+    flat_idx = recv_idx.reshape(-1)
+    ok = flat_idx < out_size  # every real tuple here is owned by `shard`
+    local_idx = jnp.where(ok, flat_idx - shard * shard_range, shard_range)
+    return (
+        local_idx.astype(jnp.int32),
+        recv_val.reshape((n_dev * capacity,) + val.shape[1:]),
+    )
+
+
+def clamp_for_local_reduce(local_idx: jnp.ndarray, shard_range: int) -> jnp.ndarray:
+    """Make an exchanged stream legal for ANY local reduce method.
+
+    ``owner_exchange`` marks padding/foreign slots with the sentinel
+    ``shard_range`` — fine for order-aware consumers that trim by count
+    (``shard_build_csr``), but an out-of-range bin id is undefined input
+    for ``binning_counting`` (its counting permutation only covers
+    in-range bids). Sentinel slots already carry the op identity as
+    their value, so clamping them onto the last in-range index is a
+    no-op for the reduction and keeps every bid in range."""
+    return jnp.minimum(local_idx, shard_range - 1)
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_shard_reduce(
+    mesh, axis_name, out_size, op, method, shard_range, n_dev, capacity, block,
+    bin_range, plan,
+):
+    ident_fill = 0 if op == "add" else None  # resolved per-dtype below
+
+    def f(idx, val):
+        fill = pb.reduce_identity(op, val.dtype) if ident_fill is None else 0
+        local_idx, local_val = owner_exchange(
+            idx,
+            val,
+            out_size=out_size,
+            shard_range=shard_range,
+            n_dev=n_dev,
+            axis_name=axis_name,
+            capacity=capacity,
+            block=block,
+            fill_val=fill,
+        )
+        return execute_reduce(
+            clamp_for_local_reduce(local_idx, shard_range),
+            local_val,
+            out_size=shard_range,
+            op=op,
+            method=method,
+            bin_range=bin_range,
+            plan=plan,
+            block=block,
+        )
+
+    spec = P(axis_name)
+    sharded = shard_map(
+        f, mesh=mesh, in_specs=(spec, spec), out_specs=spec, check_vma=False
+    )
+    return jax.jit(sharded)
+
+
+def shard_reduce_stream(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    out_size: int,
+    mesh: Optional[Mesh] = None,
+    op: str = "add",
+    axis_name: Optional[str] = None,
+    method: str = "fused",
+    bin_range: Optional[int] = None,
+    capacity: Optional[int] = None,
+    block: int = 2048,
+    plan=None,
+) -> jnp.ndarray:
+    """Reduce one commutative (indices, values) stream to a dense
+    ``(out_size, ...)`` array across a device mesh (DESIGN.md §9).
+
+    The coarsest binning pass routes tuples over the interconnect
+    (``owner_exchange``); each device then runs the single-device reduce
+    (``method``, default the fused single sweep of DESIGN.md §8) over its
+    owned index range, and the owner-sharded results concatenate to the
+    global output. Numerically equivalent to single-device
+    ``execute_reduce``: exact for integer ops; for floats the summation
+    tree differs (per-shard partials), so compare with a tolerance.
+
+    ``mesh=None`` or a 1-device mesh IS the single-device path —
+    bit-stable with today's ``execute_reduce``. Handles empty shards
+    (``out_size < n_dev``) and non-divisible stream/domain sizes via
+    sentinel-dropped padding. ``capacity`` (tuples per destination
+    segment; default the always-safe per-device stream length) trades
+    exchange volume against worst-case skew — see DESIGN.md §9.
+    """
+    if op not in REDUCE_OPS:
+        raise ValueError(
+            f"shard_reduce_stream serves commutative reductions {REDUCE_OPS}; "
+            f"got op={op!r}"
+        )
+    n_dev = 1 if mesh is None else int(mesh.shape[resolve_stream_axis(mesh, axis_name)])
+    if mesh is None or n_dev == 1:
+        return execute_reduce(
+            indices, values, out_size=out_size, op=op, method=method,
+            bin_range=bin_range, block=block, plan=plan,
+        )
+    axis = resolve_stream_axis(mesh, axis_name)
+    m = int(indices.shape[0])
+    ident = pb.reduce_identity(op, values.dtype)
+    if m == 0:
+        return jnp.full((out_size,) + values.shape[1:], ident, values.dtype)
+    r = shard_range_for(out_size, n_dev)
+    m_local = -(-m // n_dev)
+    cap = int(capacity) if capacity is not None else m_local
+    # pad to n_dev * m_local (the next multiple of n_dev): sentinel index
+    # out_size marks padding all the way down the pipeline
+    idx_p = _pad_to_multiple(indices, n_dev, out_size)
+    val_p = _pad_to_multiple(values, n_dev, 0)
+    fn = _jitted_shard_reduce(
+        mesh, axis, out_size, op, method, r, n_dev, cap, block, bin_range, plan,
+    )
+    out = fn(idx_p, val_p)
+    return out[:out_size]
+
+
+# ---------------------------------------------------------------------------
+# Distributed pre-processing: sharded Neighbor-Populate (EL -> CSR).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_shard_csr(mesh, axis_name, num_nodes, shard_range, n_dev, capacity, block):
+    def f(src, dst):
+        local_src, dst_r = owner_exchange(
+            src,
+            dst,
+            out_size=num_nodes,
+            shard_range=shard_range,
+            n_dev=n_dev,
+            axis_name=axis_name,
+            capacity=capacity,
+            block=block,
+        )
+        # Bin-Read over the owned vertex range: fine stable grouping by
+        # local src. Sentinels (shard_range) sort last and are trimmed
+        # off by `count` during host assembly.
+        order = jnp.argsort(local_src, stable=True)
+        dst_sorted = jnp.take(dst_r, order)
+        count = jnp.sum(local_src < shard_range).astype(jnp.int32)
+        return dst_sorted[None, :], count[None]
+
+    spec = P(axis_name)
+    return jax.jit(
+        shard_map(
+            f,
+            mesh=mesh,
+            in_specs=(spec, spec),
+            out_specs=(P(axis_name, None), spec),
+            check_vma=False,
+        )
+    )
+
+
+def shard_build_csr(
+    coo: COO,
+    mesh: Optional[Mesh] = None,
+    axis_name: Optional[str] = None,
+    capacity: Optional[int] = None,
+    block: int = 2048,
+) -> CSR:
+    """Distributed Neighbor-Populate (paper Algorithm 2 at mesh scale,
+    DESIGN.md §9): edges are owner-routed by source vertex over the
+    interconnect, each device stably groups its owned vertex range, and
+    the owned neighbor-array slices concatenate (in shard order = global
+    vertex order) into the CSR. Degree counting runs as the sharded
+    fused reduction. Stability across the shard boundary (stable local
+    partition + source-ordered all_to_all) preserves Edgelist order
+    within each vertex, so the result matches ``build_csr_oracle``
+    exactly — the same guarantee the single-device PB build gives.
+    """
+    n, m = coo.num_nodes, coo.num_edges
+    n_dev = 1 if mesh is None else int(mesh.shape[resolve_stream_axis(mesh, axis_name)])
+    if mesh is None or n_dev == 1 or m == 0:
+        from repro.core.neighbor_populate import build_csr_pb
+
+        return build_csr_pb(coo, method="auto")
+    axis = resolve_stream_axis(mesh, axis_name)
+    degrees = shard_reduce_stream(
+        coo.src,
+        jnp.ones((m,), jnp.int32),
+        out_size=n,
+        mesh=mesh,
+        op="add",
+        axis_name=axis,
+        block=block,
+    )
+    offsets = offsets_from_degrees(degrees)
+    r = shard_range_for(n, n_dev)
+    m_local = -(-m // n_dev)
+    cap = int(capacity) if capacity is not None else m_local
+    src_p = _pad_to_multiple(coo.src, n_dev, n)  # sentinel src = n: dropped
+    dst_p = _pad_to_multiple(coo.dst, n_dev, 0)
+    fn = _jitted_shard_csr(mesh, axis, n, r, n_dev, cap, block)
+    dst_sorted, counts = fn(src_p, dst_p)
+    # host assembly: concatenate the valid prefix of every owned slice
+    # (ragged lengths = per-shard edge ownership, data-dependent)
+    ds = np.asarray(dst_sorted)
+    cs = np.asarray(counts)
+    neighs = np.concatenate([ds[d, : cs[d]] for d in range(n_dev)] or [np.zeros(0, np.int32)])
+    return CSR(offsets, jnp.asarray(neighs, dtype=jnp.int32), n)

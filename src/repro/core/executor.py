@@ -38,6 +38,13 @@ A ``vmap``-able batched path (``bin_streams`` / ``scatter_add_batched``)
 serves many-small-frontier traffic: one decision covers the whole batch,
 amortizing planning the way serving-style workloads need.
 
+At mesh scale, ``shard_reduce_stream`` adds the device level of the
+C-Buffer hierarchy (``core/distributed_pb.py``, DESIGN.md §9): the
+coarsest binning pass owner-routes tuples over the interconnect, then
+each device runs the decision-driven local reduce over its owned index
+range. Cache keys carry the device topology, so a decision measured on
+one mesh is never replayed on another.
+
 Extending with a new workload = expressing it as an (indices, values)
 stream and calling this module — see DESIGN.md §4.
 """
@@ -578,6 +585,7 @@ class PBExecutor:
         bin_range: Optional[int] = None,
         kind: str = "bin",
         op: str = "add",
+        mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
     ) -> str:
         # bin_range is part of the key: a method measured at one range is
         # not evidence about another (counting's cost is ~linear in the
@@ -585,9 +593,16 @@ class PBExecutor:
         # separates reduction entries (the fused candidate exists there,
         # dtype is the VALUE dtype, and the op shapes the apply cost)
         # from pure binning entries in the persisted cache schema.
+        # Device topology is always part of the key: a method measured on
+        # one device is not evidence about a sharded run (the per-device
+        # stream/domain shrink with the mesh, DESIGN.md §9), and a mesh
+        # decision must never be replayed on a different topology.
+        topo = f"d{jax.device_count()}"
+        if mesh_shape:
+            topo += "/" + "x".join(f"{a}{s}" for a, s in mesh_shape)
         base = (
             f"{num_indices}:{stream_len}:{jnp.dtype(dtype).name}:"
-            f"{jax.default_backend()}"
+            f"{jax.default_backend()}:{topo}"
         )
         if kind != "bin":
             base = f"{base}:{kind}:{op}"
@@ -662,6 +677,7 @@ class PBExecutor:
         flat_values: bool = True,
         kind: str = "bin",
         op: str = "add",
+        mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
     ) -> BinningDecision:
         """Pick (method, bin_range, plan) for a stream shape.
 
@@ -670,22 +686,28 @@ class PBExecutor:
         "bin" for stream binning or "reduce" for dense reductions, where
         the fused single-sweep method joins the candidate set, ``dtype``
         is the value dtype, and ``op`` keys the cache entry.
+        ``mesh_shape`` (tuples of (axis, size)) keys sharded decisions by
+        device topology; single-device keys still carry the process's
+        device count (DESIGN.md §9).
         """
-        key = self._key(num_indices, stream_len, dtype, bin_range, kind, op)
+        key = self._key(
+            num_indices, stream_len, dtype, bin_range, kind, op, mesh_shape
+        )
         d = self._decide_uncached(
             key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
         )
         if len(self.decision_log) < _DECISION_LOG_CAP:
-            self.decision_log.append(
-                {
-                    "kind": kind,
-                    "num_indices": num_indices,
-                    "stream_len": stream_len,
-                    "method": d.method,
-                    "bin_range": d.bin_range,
-                    "source": d.source,
-                }
-            )
+            entry = {
+                "kind": kind,
+                "num_indices": num_indices,
+                "stream_len": stream_len,
+                "method": d.method,
+                "bin_range": d.bin_range,
+                "source": d.source,
+            }
+            if mesh_shape:
+                entry["mesh"] = {a: s for a, s in mesh_shape}
+            self.decision_log.append(entry)
         return d
 
     def _decide_uncached(
@@ -879,6 +901,81 @@ class PBExecutor:
             self.interpret, d.plan, self.use_pallas, sorted_within,
         )
         return fn(indices, values)
+
+    def shard_reduce_stream(
+        self,
+        indices: jnp.ndarray,
+        values: jnp.ndarray,
+        *,
+        out_size: int,
+        mesh=None,
+        op: str = "add",
+        axis_name: Optional[str] = None,
+        bin_range: Optional[int] = None,
+        method: Optional[str] = None,
+        capacity: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Mesh-sharded commutative reduction (DESIGN.md §9): the device
+        shard is the coarsest C-Buffer level, the interconnect its
+        eviction path (``core/distributed_pb.py``). ``decide`` picks the
+        device-local method at the PER-DEVICE shape (owned index range,
+        received stream length) under a topology-extended cache key, so
+        single-device autotune decisions are never replayed for sharded
+        runs. ``mesh=None`` or one device degrades to ``reduce_stream``
+        bit-stably.
+        """
+        from repro.core import distributed_pb as dpb
+
+        if op not in REDUCE_OPS:
+            raise ValueError(
+                f"shard_reduce_stream only serves commutative reductions "
+                f"{REDUCE_OPS}; got op={op!r}. Non-commutative consumers "
+                "need the stable exchange + an order-aware Bin-Read "
+                "(see distributed_pb.shard_build_csr)."
+            )
+        n_dev = (
+            1
+            if mesh is None
+            else int(mesh.shape[dpb.resolve_stream_axis(mesh, axis_name)])
+        )
+        if mesh is None or n_dev == 1:
+            return self.reduce_stream(
+                indices, values, out_size=out_size, op=op, bin_range=bin_range,
+                method=method,
+            )
+        m = int(indices.shape[0])
+        r = dpb.shard_range_for(out_size, n_dev)
+        cap = capacity if capacity is not None else -(-max(m, 1) // n_dev)
+        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        if method in (None, "auto"):
+            vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
+            d = self.decide(
+                r,  # per-device domain: the owned index range
+                n_dev * cap,  # per-device stream: the padded received exchange
+                vdtype,
+                bin_range=bin_range,
+                flat_values=flat,
+                kind="reduce",
+                op=op,
+                mesh_shape=tuple(sorted(mesh.shape.items())),
+            )
+        else:
+            d = self._finalize(method, r, bin_range, "caller")
+        if not flat and d.method == "pallas":  # pallas binning is 1-D-only
+            d = self._finalize("sort", r, bin_range, d.source)
+        return dpb.shard_reduce_stream(
+            indices,
+            values,
+            out_size=out_size,
+            mesh=mesh,
+            op=op,
+            axis_name=axis_name,
+            method=d.method,
+            bin_range=d.bin_range,
+            capacity=cap,  # the capacity the decision was keyed on
+            block=self.block,
+            plan=d.plan,
+        )
 
     def scatter_add(
         self,

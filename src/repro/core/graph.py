@@ -161,6 +161,13 @@ def gen_bubbles(side: int, seed: int = 0) -> COO:
     return _to_coo(perm[src][order].astype(np.int32), perm[dst][order].astype(np.int32), n)
 
 
+# Version of the generators + npz layout above. Bump on ANY change to a
+# generator's sampling logic or to the cache schema: the version is part
+# of every cache entry, so stale files regenerate instead of silently
+# deserializing a graph the current code would never produce.
+GRAPH_GEN_VERSION = 2
+
+
 def _graph_cache_dir() -> str:
     import os
 
@@ -174,9 +181,12 @@ def cached_graph(key: str, maker) -> COO:
     """Load a generated graph from the npz cache, or generate and save.
 
     ``key`` encodes generator + parameters + seed (the full determinism
-    domain), so a cache hit is bit-identical to regeneration. Both cache
-    layers degrade silently: a corrupt file regenerates, an unwritable
-    cache dir skips persistence — the suite never fails over caching.
+    domain) and every entry embeds ``GRAPH_GEN_VERSION``, so a cache hit
+    is bit-identical to regeneration by the CURRENT generators — an
+    entry written by an older generator or npz layout misses and
+    regenerates. Both cache layers degrade silently: a corrupt file
+    regenerates, an unwritable cache dir skips persistence — the suite
+    never fails over caching.
     """
     import os
 
@@ -185,7 +195,11 @@ def cached_graph(key: str, maker) -> COO:
     path = os.path.join(_graph_cache_dir(), f"{key}.npz")
     try:
         with np.load(path) as z:
-            return _to_coo(z["src"], z["dst"], int(z["num_nodes"]))
+            if (
+                "gen_version" in z.files
+                and int(z["gen_version"]) == GRAPH_GEN_VERSION
+            ):
+                return _to_coo(z["src"], z["dst"], int(z["num_nodes"]))
     except (OSError, KeyError, ValueError, zipfile.BadZipFile):
         pass  # missing/corrupt/truncated cache entry: regenerate below
     g = maker()
@@ -198,6 +212,7 @@ def cached_graph(key: str, maker) -> COO:
                 src=np.asarray(g.src),
                 dst=np.asarray(g.dst),
                 num_nodes=np.int64(g.num_nodes),
+                gen_version=np.int64(GRAPH_GEN_VERSION),
             )
         os.replace(tmp, path)
     except OSError:

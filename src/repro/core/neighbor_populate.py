@@ -122,6 +122,21 @@ def build_csr_pb(
     return CSR(offsets, neighs, coo.num_nodes)
 
 
+def build_csr_sharded(
+    coo: COO, mesh=None, axis_name: str | None = None, capacity: int | None = None
+) -> CSR:
+    """Distributed Neighbor-Populate (DESIGN.md §9): the coarse Binning
+    pass owner-routes edges by source vertex across the mesh — paper
+    Algorithm 2 with the interconnect as the top C-Buffer level. The
+    stable exchange preserves Edgelist order within each vertex, so the
+    result matches ``build_csr_oracle`` exactly, like every other build
+    variant. Pre-processing at scale: per-device HBM traffic over the
+    edge stream drops with device count."""
+    from repro.core.distributed_pb import shard_build_csr
+
+    return shard_build_csr(coo, mesh, axis_name=axis_name, capacity=capacity)
+
+
 def build_csr_cobra(coo: COO, plan: CobraPlan | None = None) -> CSR:
     """Knob-free COBRA build (paper §4): hierarchical executor method."""
     plan = plan or CobraPlan.from_hardware(coo.num_nodes)

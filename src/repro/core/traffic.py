@@ -270,6 +270,87 @@ def pr_fused_iter_seconds(m: int, n: int, hw: HardwareModel) -> float:
     return fused_cost(m, n, hw).seconds(hw)
 
 
+# --- Mesh-sharded execution (DESIGN.md §9) --------------------------------
+#
+# The device shard is the coarsest C-Buffer level and the interconnect is
+# its eviction path: owner-routed tuples leave over ICI instead of
+# bouncing through HBM, the received stream feeds the device-local fused
+# sweep, and each device writes only its owned accumulator slice. Per-
+# device HBM bytes therefore scale 1/n_dev for processing AND
+# pre-processing streams — the scaling fig7_scaling.py reports. The CPU
+# *emulation* materializes send/receive buffers in HBM (extra local
+# sweeps); these counters model the hardware-assisted ideal the paper's
+# binning engines would realize with an interconnect eviction port.
+
+ICI_BANDWIDTH = 50e9  # bytes/s per link (v5e-class, launch/mesh.py HW)
+
+
+def sharded_fused_hbm_bytes_per_device(
+    num_tuples: int,
+    num_indices: int,
+    n_dev: int,
+    tuple_bytes: int = TUPLE_BYTES,
+    value_bytes_per_index: int = 4,
+) -> float:
+    """Per-device sequential HBM bytes of the sharded fused pipeline:
+    read the local stream shard once, write the owned accumulator slice
+    once. At ``n_dev=1`` this IS ``fused_stream_bytes`` (no exchange
+    exists), and it decreases strictly monotonically with device count —
+    the property the ROADMAP's production-scale target needs."""
+    n_dev = max(1, n_dev)
+    return (
+        num_tuples / n_dev * tuple_bytes
+        + num_indices / n_dev * value_bytes_per_index
+    )
+
+
+def sharded_exchange_bytes_per_device(
+    num_tuples: int,
+    n_dev: int,
+    tuple_bytes: int = TUPLE_BYTES,
+    padded_capacity: float | None = None,
+) -> float:
+    """Per-device interconnect bytes (send + receive) of the owner-routed
+    all_to_all. ``padded_capacity=None`` models the ragged (exact)
+    exchange: under uniform ownership each destination segment holds
+    ``m_local / n_dev`` tuples, so ``(n_dev-1)/n_dev`` of a device's
+    tuples cross the interconnect. A padded exchange ships full
+    ``padded_capacity``-tuple segments instead (worst-case-skew safety at
+    ``capacity = m_local`` costs a factor ``n_dev`` in exchange volume —
+    the trade-off DESIGN.md §9 discusses)."""
+    n_dev = max(1, n_dev)
+    if n_dev == 1:
+        return 0.0
+    m_local = num_tuples / n_dev
+    per_dest = padded_capacity if padded_capacity is not None else m_local / n_dev
+    return 2.0 * (n_dev - 1) * per_dest * tuple_bytes
+
+
+def sharded_fused_seconds_per_device(
+    num_tuples: int,
+    num_indices: int,
+    n_dev: int,
+    hw: HardwareModel,
+    ici_bandwidth: float = ICI_BANDWIDTH,
+    tuple_bytes: int = TUPLE_BYTES,
+    value_bytes_per_index: int = 4,
+) -> float:
+    """Per-device time of one sharded fused reduction: the device-local
+    fused sweep over the owned shard (HBM + random-access model) plus the
+    exchange on the interconnect. HBM and ICI phases are charged serially
+    (conservative: no overlap)."""
+    n_dev = max(1, n_dev)
+    local = fused_cost(
+        -(-num_tuples // n_dev),
+        max(1, -(-num_indices // n_dev)),
+        hw,
+        tuple_bytes=tuple_bytes,
+        value_bytes_per_index=value_bytes_per_index,
+    ).seconds(hw)
+    exch = sharded_exchange_bytes_per_device(num_tuples, n_dev, tuple_bytes)
+    return local + exch / ici_bandwidth
+
+
 def pb_seconds(
     num_tuples: int, num_indices: int, bin_range: int, hw: HardwareModel
 ) -> float:

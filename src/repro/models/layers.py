@@ -471,6 +471,34 @@ def _moe_expert_shard(x2d, wr, w1, w3, w2, cfg: ModelConfig, e_start, E_local):
     return out
 
 
+def moe_combine_sharded(
+    token_ids: jnp.ndarray,
+    rows: jnp.ndarray,
+    gate_w: jnp.ndarray,
+    num_tokens: int,
+    mesh,
+    axis_name: str | None = None,
+    method: str = "fused",
+) -> jnp.ndarray:
+    """Distributed MoE combine (DESIGN.md §9): the (token, weighted-row)
+    assignment stream lives sharded across the mesh — e.g. emitted by
+    expert-sharded FFNs whose assignments were routed to the expert's
+    device — and token outputs are owner-sharded. The combine is a
+    commutative add of k rows per token, so it runs as the mesh-sharded
+    PB reduction: rows cross the interconnect ONCE, to the token's owner
+    shard, instead of every shard psum-ing a dense (T, d) partial —
+    "move the stream, not the state" (DESIGN.md §5) applied to the
+    combine collective.
+    """
+    from repro.core.distributed_pb import shard_reduce_stream
+
+    weighted = rows * gate_w[:, None].astype(rows.dtype)
+    return shard_reduce_stream(
+        token_ids, weighted, out_size=num_tokens, mesh=mesh,
+        axis_name=axis_name, op="add", method=method,
+    )
+
+
 def _moe_dense_oracle(x2d, wr, w1, w3, w2, cfg: ModelConfig):
     """O(T*E) dense reference (smoke/testing only)."""
     dt = cfg.cdtype

@@ -235,6 +235,68 @@ class PBStreamRoofline:
         return self.two_phase_bytes / self.fused_bytes
 
 
+@dataclass(frozen=True)
+class ShardedPBStreamRoofline:
+    """Roofline view of one mesh-sharded irregular update stream
+    (DESIGN.md §9): per-device HBM bytes of the owner-sharded fused
+    execution next to the interconnect bytes of the owner-routed
+    exchange. The max of the two times is the per-reduction step floor;
+    against the single-device fused floor it bounds strong-scaling
+    speedup — the interconnect term is what caps it once
+    ``hbm_bytes/hbm_bw < ici_bytes/ici_bw``."""
+
+    num_tuples: int
+    num_indices: int
+    n_dev: int
+    tuple_bytes: int = 8
+    value_bytes: int = 4
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+    padded_capacity: Optional[float] = None
+
+    @property
+    def hbm_bytes_per_device(self) -> float:
+        from repro.core.traffic import sharded_fused_hbm_bytes_per_device
+
+        return sharded_fused_hbm_bytes_per_device(
+            self.num_tuples, self.num_indices, self.n_dev,
+            self.tuple_bytes, self.value_bytes,
+        )
+
+    @property
+    def ici_bytes_per_device(self) -> float:
+        from repro.core.traffic import sharded_exchange_bytes_per_device
+
+        return sharded_exchange_bytes_per_device(
+            self.num_tuples, self.n_dev, self.tuple_bytes, self.padded_capacity
+        )
+
+    @property
+    def t_hbm(self) -> float:
+        return self.hbm_bytes_per_device / self.hbm_bw
+
+    @property
+    def t_ici(self) -> float:
+        return self.ici_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        return "hbm" if self.t_hbm >= self.t_ici else "interconnect"
+
+    @property
+    def t_step(self) -> float:
+        return max(self.t_hbm, self.t_ici)
+
+    @property
+    def speedup_ceiling(self) -> float:
+        """Bandwidth-bound speedup over the single-device fused sweep."""
+        single = PBStreamRoofline(
+            self.num_tuples, self.num_indices, self.tuple_bytes,
+            self.value_bytes, self.hbm_bw,
+        ).t_fused
+        return single / max(self.t_step, 1e-30)
+
+
 def extrapolate(c_a: CellCost, c_b: CellCost, num_layers: int) -> CellCost:
     dl = c_b.num_layers - c_a.num_layers
     assert dl > 0

@@ -1,0 +1,249 @@
+"""Mesh-sharded PB reduction (core/distributed_pb.py, DESIGN.md §9).
+
+Equivalence tests run in a subprocess with 8 forced host devices (the
+test_distributed.py isolation rule: the main pytest process keeps its
+single CPU device). Topology-free properties (cache keys, single-device
+fallbacks, traffic model) run in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str, devices: int = 8, timeout: int = 900):
+    code = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_shard_reduce_equivalence_8dev():
+    """shard_reduce_stream on a forced 8-device mesh == single-device
+    execute_reduce: exact for int ops, tolerance for float — including
+    empty-shard, non-divisible, row-valued, and forced-method cases."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import make_stream_mesh, shard_reduce_stream
+        from repro.core.executor import execute_reduce
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        rng = np.random.default_rng(0)
+
+        def check(idx, val, out_size, op, exact, **kw):
+            got = np.asarray(shard_reduce_stream(
+                jnp.asarray(idx), jnp.asarray(val), out_size=out_size,
+                mesh=mesh, op=op, **kw))
+            want = np.asarray(execute_reduce(
+                jnp.asarray(idx), jnp.asarray(val), out_size=out_size, op=op,
+                method="fused"))
+            if exact:
+                assert np.array_equal(got, want)
+            else:
+                np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+        # pagerank-style float add, non-divisible stream AND domain
+        m, n = 1001, 777
+        idx = rng.integers(0, n, m).astype(np.int32)
+        check(idx, rng.standard_normal(m).astype(np.float32), n, "add", False)
+        # components-style int min: exact
+        check(idx, rng.integers(0, 10_000, m).astype(np.int32), n, "min", True)
+        # CSR-build degree stream (add of ones): exact
+        check(idx, np.ones(m, np.int32), n, "add", True)
+        # empty shards: out_size < n_dev
+        check(idx % 5, np.ones(m, np.int32), 5, "add", True)
+        # stream shorter than the device count
+        check(np.array([3, 1], np.int32), np.ones(2, np.int32), n, "add", True)
+        # row values (MoE-combine shape)
+        check(idx, rng.standard_normal((m, 7)).astype(np.float32), n, "add", False)
+        # two-phase local method (decision override)
+        check(idx, np.ones(m, np.int32), n, "add", True, method="sort")
+        check(idx, np.ones(m, np.int32), n, "add", True, method="counting")
+        # 1-device mesh degrades to the single-device path bit-stably
+        v = rng.standard_normal(m).astype(np.float32)
+        got1 = shard_reduce_stream(jnp.asarray(idx), jnp.asarray(v),
+                                   out_size=n, mesh=make_stream_mesh(1), op="add")
+        want1 = execute_reduce(jnp.asarray(idx), jnp.asarray(v), out_size=n,
+                               op="add", method="fused")
+        assert np.array_equal(np.asarray(got1), np.asarray(want1))
+        print("equivalence OK")
+    """)
+
+
+def test_sharded_consumers_8dev():
+    """The distributed consumer paths against their single-device
+    references: pagerank (tolerance), components (exact, incl. iteration
+    count), CSR build (exact, oracle order), MoE combine, and the
+    topology-keyed executor entry point."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (make_stream_mesh, pagerank_sharded, pagerank_fused,
+                                connected_components, connected_components_sharded,
+                                build_csr_sharded, build_csr_oracle,
+                                get_default_executor)
+        from repro.core.executor import execute_reduce
+        from repro.core.graph import gen_powerlaw, gen_road
+        from repro.models.layers import moe_combine_sharded
+
+        mesh = make_stream_mesh(8)
+        g = gen_powerlaw(1 << 10, 4, seed=1)
+
+        r1 = pagerank_sharded(g, mesh, iters=5)
+        r0 = pagerank_fused(g, iters=5)
+        np.testing.assert_allclose(np.asarray(r1.ranks), np.asarray(r0.ranks),
+                                   rtol=1e-5, atol=1e-8)
+
+        road = gen_road(24, seed=4)
+        c1 = connected_components_sharded(road, mesh)
+        c0 = connected_components(road)
+        assert np.array_equal(np.asarray(c1.labels), np.asarray(c0.labels))
+        assert int(c1.iters) == int(c0.iters)
+
+        csr = build_csr_sharded(g, mesh)
+        orc = build_csr_oracle(g)
+        assert np.array_equal(np.asarray(csr.offsets), np.asarray(orc.offsets))
+        assert np.array_equal(np.asarray(csr.neighs), np.asarray(orc.neighs))
+
+        rng = np.random.default_rng(0)
+        T, k, d = 37, 2, 16
+        tok = jnp.asarray(np.arange(T, dtype=np.int32).repeat(k))
+        rows = jnp.asarray(rng.standard_normal((T * k, d)), jnp.float32)
+        gw = jnp.asarray(rng.random(T * k), jnp.float32)
+        got = moe_combine_sharded(tok, rows, gw, T, mesh)
+        want = jnp.zeros((T, d), jnp.float32).at[tok].add(rows * gw[:, None])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+        ex = get_default_executor()
+        idx = jnp.asarray(rng.integers(0, 500, 2000), jnp.int32)
+        val = jnp.asarray(rng.standard_normal(2000), jnp.float32)
+        out = ex.shard_reduce_stream(idx, val, out_size=500, mesh=mesh)
+        want = execute_reduce(idx, val, out_size=500, op="add", method="fused")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        # the sharded decision is logged with its topology
+        last = ex.decision_log[-1]
+        assert last["mesh"] == {"shard": 8} and last["kind"] == "reduce"
+        print("consumers OK")
+    """)
+
+
+def test_key_includes_device_topology():
+    """Satellite fix: a single-device autotune decision must never be
+    replayed for a sharded run — the cache key carries device count and,
+    for sharded decisions, the mesh shape."""
+    import jax
+
+    from repro.core import PBExecutor
+
+    ex = PBExecutor()
+    k_plain = ex._key(1000, 8000, jnp.float32, kind="reduce")
+    assert f":d{jax.device_count()}" in k_plain  # process device count
+    k_mesh = ex._key(1000, 8000, jnp.float32, kind="reduce", mesh_shape=(("shard", 8),))
+    k_mesh2 = ex._key(1000, 8000, jnp.float32, kind="reduce", mesh_shape=(("shard", 4),))
+    assert len({k_plain, k_mesh, k_mesh2}) == 3
+    assert "shard8" in k_mesh and "shard4" in k_mesh2
+
+
+def test_single_device_fallbacks():
+    """mesh=None routes every sharded entry point through today's
+    single-device paths unchanged."""
+    from repro.core import get_default_executor, shard_reduce_stream
+    from repro.core.executor import execute_reduce
+
+    rng = np.random.default_rng(3)
+    idx = jnp.asarray(rng.integers(0, 100, 500), jnp.int32)
+    val = jnp.asarray(rng.standard_normal(500), jnp.float32)
+    want = np.asarray(execute_reduce(idx, val, out_size=100, op="add", method="fused"))
+    got = np.asarray(shard_reduce_stream(idx, val, out_size=100, mesh=None))
+    assert np.array_equal(got, want)
+    got2 = np.asarray(
+        get_default_executor().shard_reduce_stream(idx, val, out_size=100, mesh=None)
+    )
+    np.testing.assert_allclose(got2, want, rtol=1e-6)
+    with pytest.raises(ValueError, match="commutative"):
+        shard_reduce_stream(idx, val, out_size=100, op="max")
+    with pytest.raises(ValueError, match="commutative"):
+        get_default_executor().shard_reduce_stream(idx, val, out_size=100, op="max")
+
+
+def test_empty_stream_identity():
+    from repro.core import shard_reduce_stream
+
+    out = shard_reduce_stream(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32), out_size=7, op="min"
+    )
+    assert np.array_equal(np.asarray(out), np.full(7, np.iinfo(np.int32).max))
+
+
+def test_sharded_traffic_model_monotone():
+    """Acceptance: modeled per-device HBM bytes decrease monotonically
+    with device count; ragged exchange bytes stay below padded; n_dev=1
+    is exactly the single-device fused counter."""
+    from repro.core import traffic
+
+    for n, m in [(1 << 20, 1 << 23), (1 << 15, 1 << 17), (100, 1000)]:
+        per_dev = [
+            traffic.sharded_fused_hbm_bytes_per_device(m, n, k)
+            for k in (1, 2, 4, 8, 16)
+        ]
+        assert all(a > b for a, b in zip(per_dev, per_dev[1:])), (n, m, per_dev)
+        assert per_dev[0] == traffic.fused_stream_bytes(m, n)
+        ragged = traffic.sharded_exchange_bytes_per_device(m, 8)
+        padded = traffic.sharded_exchange_bytes_per_device(
+            m, 8, padded_capacity=m / 8
+        )
+        assert 0 < ragged < padded
+    assert traffic.sharded_exchange_bytes_per_device(1 << 20, 1) == 0.0
+
+
+def test_sharded_roofline():
+    from repro.roofline import PBStreamRoofline, ShardedPBStreamRoofline
+
+    rl = ShardedPBStreamRoofline(num_tuples=1 << 27, num_indices=1 << 25, n_dev=8)
+    assert rl.t_hbm > 0 and rl.t_ici > 0
+    assert rl.bottleneck in ("hbm", "interconnect")
+    # per-device HBM time must undercut the single-device fused sweep
+    single = PBStreamRoofline(1 << 27, 1 << 25)
+    assert rl.t_hbm < single.t_fused
+    # with an infinitely fast interconnect the ceiling is the HBM ratio
+    fast_ici = ShardedPBStreamRoofline(
+        num_tuples=1 << 27, num_indices=1 << 25, n_dev=8, ici_bw=1e18
+    )
+    np.testing.assert_allclose(fast_ici.speedup_ceiling, 8.0, rtol=1e-6)
+
+
+def test_graph_cache_gen_version(tmp_path, monkeypatch):
+    """Satellite fix: bumping GRAPH_GEN_VERSION invalidates cached npz
+    entries instead of silently deserializing a stale graph."""
+    from repro.core import graph as G
+
+    monkeypatch.setenv("REPRO_PB_CACHE_DIR", str(tmp_path))
+    calls = {"n": 0}
+
+    def maker():
+        calls["n"] += 1
+        return G.gen_uniform(64, 2, seed=9)
+
+    g1 = G.cached_graph("unit_v_test", maker)
+    g2 = G.cached_graph("unit_v_test", maker)
+    assert calls["n"] == 1  # second call was a cache hit
+    assert np.array_equal(np.asarray(g1.src), np.asarray(g2.src))
+    monkeypatch.setattr(G, "GRAPH_GEN_VERSION", G.GRAPH_GEN_VERSION + 1)
+    G.cached_graph("unit_v_test", maker)
+    assert calls["n"] == 2  # stale version regenerated
+    G.cached_graph("unit_v_test", maker)
+    assert calls["n"] == 2  # re-cached under the new version
