@@ -11,7 +11,9 @@ SCALE = os.environ.get("BENCH_SCALE", "small")  # small | full
 
 
 def graph_scale() -> str:
-    return "bench" if SCALE == "full" else "smoke"
+    # read at call time, not import time: standalone benchmark modules
+    # (fig2_preproc_cost --smoke) override BENCH_SCALE after importing us
+    return "bench" if os.environ.get("BENCH_SCALE", SCALE) == "full" else "smoke"
 
 
 # The paper evaluates 18-51M-vertex graphs with average degree 2-8 on a

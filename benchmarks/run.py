@@ -28,12 +28,13 @@ MODULES = [
     "benchmarks.executor_autotune",
 ]
 
-# Fast, representative subset: one paper table, the executor's own
-# selection bench, one framework-integration stream, and the sharded
-# scaling sweep (it forces its own 8-device subprocess, so it runs
-# anywhere).
+# Fast, representative subset: one paper table, the preprocessing
+# pipeline + amortization sweep, the executor's own selection bench, one
+# framework-integration stream, and the sharded scaling sweep (it forces
+# its own 8-device subprocess, so it runs anywhere).
 SMOKE_MODULES = [
     "benchmarks.table1_pb_speedup",
+    "benchmarks.fig2_preproc_cost",
     "benchmarks.fig6_breakdown",
     "benchmarks.fig7_scaling",
     "benchmarks.executor_autotune",
@@ -101,7 +102,9 @@ def main() -> None:
             print(f"# {modname} done in {time.time()-t0:.0f}s", file=sys.stderr)
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
-            print(f"{modname},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+            row = f"{modname},0.0,ERROR:{type(e).__name__}:{e}"
+            all_rows.append(row)  # recorded in BENCH_smoke.json so the
+            print(row, flush=True)  # row guard also sees module crashes
     if smoke:
         _write_smoke_json(all_rows, module_secs)
     if failures:

@@ -71,9 +71,10 @@ def main():
               f"(plan fanouts {plan.level_fanouts})")
 
         (csr_r, _), t_ro = timed(lambda: degree_sort_rebuild(g, method="pb", bin_range=br))
-        (ecc, _), t_ra = timed(lambda: radii(csr_r, k=4, max_iters=300))
+        rad, t_ra = timed(lambda: radii(csr_r, k=4, max_iters=300))
         print(f"  E degree-sort(PB) + radii : {(t_ro+t_ra)*1e3:8.1f} ms "
-              f"(max ecc {int(np.asarray(ecc).max())})")
+              f"(max ecc {int(np.asarray(rad.ecc).max())}"
+              f"{'' if bool(rad.converged) else ', TRUNCATED'})")
 
 
 if __name__ == "__main__":

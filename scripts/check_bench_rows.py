@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Fail if a freshly written BENCH_smoke.json LOSES rows relative to the
+committed baseline (simple key-set regression guard).
+
+CI regenerates BENCH_smoke.json with ``python -m benchmarks.run --smoke``
+and then runs this script: every row name present in the committed
+baseline (``git show HEAD:BENCH_smoke.json`` by default) must still be
+present in the fresh file. New rows are fine — the guard only catches a
+benchmark module silently dropping coverage (a module crash surfaces as
+an ``ERROR:`` row, which also fails here). Override the baseline with
+``--baseline <ref-or-path>``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CURRENT = os.path.join(ROOT, "BENCH_smoke.json")
+
+
+def load_baseline(ref: str) -> dict | None:
+    """A git ref (show HEAD:BENCH_smoke.json) or a plain file path."""
+    if os.path.isfile(ref):
+        with open(ref) as f:
+            return json.load(f)
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:BENCH_smoke.json"],
+            cwd=ROOT, capture_output=True, text=True, check=True,
+        ).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, ValueError, OSError):
+        return None
+
+
+def row_names(blob: dict) -> set[str]:
+    return {r["name"] for r in blob.get("rows", [])}
+
+
+def main() -> int:
+    ref = "HEAD"
+    if "--baseline" in sys.argv[1:]:
+        ref = sys.argv[sys.argv.index("--baseline") + 1]
+    try:
+        with open(CURRENT) as f:
+            cur = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_bench_rows: cannot read {CURRENT}: {e}", file=sys.stderr)
+        return 1
+    errors = []
+    failed = [
+        r["name"] for r in cur.get("rows", []) if r["derived"].startswith("ERROR:")
+    ]
+    if failed:
+        errors.append(f"benchmark module(s) errored: {sorted(failed)}")
+    base = load_baseline(ref)
+    if base is None:
+        # no committed baseline yet (first run / shallow clone): only the
+        # ERROR check applies
+        print(f"check_bench_rows: no baseline at {ref!r}; skipping key-set diff")
+    else:
+        missing = sorted(row_names(base) - row_names(cur))
+        if missing:
+            errors.append(
+                f"{len(missing)} row(s) in the {ref} baseline are gone: "
+                + ", ".join(missing[:20])
+                + (" ..." if len(missing) > 20 else "")
+            )
+        gained = row_names(cur) - row_names(base)
+        print(
+            f"check_bench_rows: {len(row_names(cur))} rows "
+            f"({len(gained)} new vs {ref})"
+        )
+    if errors:
+        for e in errors:
+            print(f"check_bench_rows: FAIL: {e}", file=sys.stderr)
+        return 1
+    print("check_bench_rows: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

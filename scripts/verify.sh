@@ -10,6 +10,9 @@ python -m pytest -x -q
 echo "== benchmark smoke =="
 python -m benchmarks.run --smoke
 
+echo "== bench row regression guard =="
+python scripts/check_bench_rows.py
+
 echo "== docs-check =="
 python scripts/docs_check.py
 

@@ -30,11 +30,16 @@ from repro.core.graph import (
     transpose_coo,
 )
 from repro.core.neighbor_populate import (
+    BUILD_METHODS,
+    build_csc,
+    build_csr,
     build_csr_baseline,
     build_csr_cobra,
+    build_csr_csc,
     build_csr_oracle,
     build_csr_pb,
     build_csr_sharded,
+    csr_equal_as_sets,
 )
 from repro.core.pagerank import (
     pagerank_coo_scatter,
@@ -45,6 +50,20 @@ from repro.core.pagerank import (
 )
 from repro.core.pb import Bins, binning, binning_counting, binning_sort
 from repro.core.plan import CobraPlan, HardwareModel, compromise_bin_range
+from repro.core.preprocess import (
+    PreprocessPipeline,
+    PreprocessReport,
+    PreprocessResult,
+    amortization_iters,
+)
+from repro.core.radii import RadiiResult, radii
+from repro.core.reorder import (
+    REORDER_VARIANTS,
+    degree_sort_rebuild,
+    relabel_coo,
+    reorder_mapping,
+    reorder_rebuild,
+)
 from repro.core.scatter import pb_scatter_add, scatter_add_baseline
 
 __all__ = [
@@ -56,14 +75,30 @@ __all__ = [
     "CobraPlan",
     "HardwareModel",
     "PBExecutor",
+    "BUILD_METHODS",
+    "PreprocessPipeline",
+    "PreprocessReport",
+    "PreprocessResult",
+    "RadiiResult",
+    "REORDER_VARIANTS",
+    "amortization_iters",
     "binning",
     "binning_counting",
     "binning_sort",
+    "build_csc",
+    "build_csr",
     "build_csr_baseline",
     "build_csr_cobra",
+    "build_csr_csc",
     "build_csr_oracle",
     "build_csr_pb",
     "build_csr_sharded",
+    "csr_equal_as_sets",
+    "degree_sort_rebuild",
+    "radii",
+    "relabel_coo",
+    "reorder_mapping",
+    "reorder_rebuild",
     "REDUCE_METHODS",
     "cobra_scatter_add",
     "compromise_bin_range",

@@ -102,10 +102,9 @@ def connected_components_fused(
     from repro.core.executor import get_default_executor
 
     ex = get_default_executor()
-    if method is None or method == "auto":
-        d = ex.decide(coo.num_nodes, coo.num_edges, jnp.int32, kind="reduce", op="min")
-    else:
-        d = ex._finalize(method, coo.num_nodes, None, "caller")
+    d = ex.decide_or_forced(
+        method, coo.num_nodes, coo.num_edges, jnp.int32, kind="reduce", op="min"
+    )
     labels, it = _cc_fused(
         coo.src, coo.dst, coo.num_nodes, max_iters, d.method, d.bin_range,
         d.num_bins, ex.block, d.plan,
@@ -114,7 +113,10 @@ def connected_components_fused(
 
 
 @functools.lru_cache(maxsize=32)
-def _cc_sharded_fn(mesh, axis, num_nodes, n_dev, r, max_iters, method, block, capacity):
+def _cc_sharded_fn(
+    mesh, axis, num_nodes, n_dev, r, max_iters, method, block, capacity,
+    bin_range=None, plan=None,
+):
     from repro.compat import shard_map
     from repro.core.distributed_pb import clamp_for_local_reduce, owner_exchange
     from repro.core.executor import execute_reduce
@@ -130,7 +132,7 @@ def _cc_sharded_fn(mesh, axis, num_nodes, n_dev, r, max_iters, method, block, ca
         )
         return execute_reduce(
             clamp_for_local_reduce(local_idx, r), local_val, out_size=r,
-            op="min", method=method, block=block,
+            op="min", method=method, bin_range=bin_range, plan=plan, block=block,
         )
 
     def f(src_l, dst_l):
@@ -171,7 +173,7 @@ def connected_components_sharded(
     mesh=None,
     max_iters: int = 512,
     axis_name: str | None = None,
-    method: str = "fused",
+    method: str | None = None,
     capacity: int | None = None,
 ) -> CCResult:
     """Label propagation with the mesh-sharded PB reduction (DESIGN.md
@@ -180,7 +182,9 @@ def connected_components_sharded(
     into the owned label slice, and all_gathered back. min is exact in
     int32, so the result (and iteration count) equals the single-device
     ``connected_components`` bit-for-bit. ``mesh=None``/1 device
-    degrades to ``connected_components_fused``.
+    degrades to ``connected_components_fused``. ``method=None``/"auto"
+    asks ``decide`` at the per-device shape (topology-keyed) — the
+    device-local method is never hardcoded.
     """
     from repro.core.distributed_pb import (
         _pad_to_multiple,
@@ -198,9 +202,16 @@ def connected_components_sharded(
     n, m = coo.num_nodes, coo.num_edges
     r = shard_range_for(n, n_dev)
     cap = capacity if capacity is not None else -(-max(m, 1) // n_dev)
+    d = ex.decide_or_forced(
+        method, r, n_dev * cap, jnp.int32, kind="reduce", op="min",
+        mesh_shape=tuple(sorted(mesh.shape.items())),
+    )
     src_p = _pad_to_multiple(coo.src, n_dev, n)
     dst_p = _pad_to_multiple(coo.dst, n_dev, n)
-    fn = _cc_sharded_fn(mesh, axis, n, n_dev, r, max_iters, method, ex.block, cap)
+    fn = _cc_sharded_fn(
+        mesh, axis, n, n_dev, r, max_iters, d.method, ex.block, cap,
+        d.bin_range, d.plan,
+    )
     labels, it = fn(src_p, dst_p)
     return CCResult(labels, it)
 

@@ -333,14 +333,19 @@ def shard_build_csr(
 
         return build_csr_pb(coo, method="auto")
     axis = resolve_stream_axis(mesh, axis_name)
-    degrees = shard_reduce_stream(
+    # degree counting through the executor's sharded reduce: the
+    # device-local method is decided at the per-device shape under the
+    # topology-extended key, never hardcoded (DESIGN.md §8.1 / §9)
+    from repro.core.executor import get_default_executor
+
+    degrees = get_default_executor().shard_reduce_stream(
         coo.src,
         jnp.ones((m,), jnp.int32),
         out_size=n,
         mesh=mesh,
         op="add",
         axis_name=axis,
-        block=block,
+        capacity=capacity,
     )
     offsets = offsets_from_degrees(degrees)
     r = shard_range_for(n, n_dev)

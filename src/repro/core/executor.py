@@ -574,6 +574,11 @@ class PBExecutor:
         # every decide() appends here — benchmarks/run.py serializes it
         # into BENCH_smoke.json so PRs have a method-decision trajectory
         self.decision_log: list = []
+        # caller-managed side channels (see add_decision_sink): unlike
+        # decision_log they are not capped, so a consumer that needs an
+        # exact per-call trace (PreprocessPipeline stage reports) still
+        # sees decisions after the shared log saturates
+        self._decision_sinks: list = []
 
     # -- decision ----------------------------------------------------------
 
@@ -696,19 +701,57 @@ class PBExecutor:
         d = self._decide_uncached(
             key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
         )
+        entry = {
+            "kind": kind,
+            "num_indices": num_indices,
+            "stream_len": stream_len,
+            "method": d.method,
+            "bin_range": d.bin_range,
+            "source": d.source,
+        }
+        if mesh_shape:
+            entry["mesh"] = {a: s for a, s in mesh_shape}
         if len(self.decision_log) < _DECISION_LOG_CAP:
-            entry = {
-                "kind": kind,
-                "num_indices": num_indices,
-                "stream_len": stream_len,
-                "method": d.method,
-                "bin_range": d.bin_range,
-                "source": d.source,
-            }
-            if mesh_shape:
-                entry["mesh"] = {a: s for a, s in mesh_shape}
             self.decision_log.append(entry)
+        for sink in self._decision_sinks:
+            sink.append(entry)
         return d
+
+    def add_decision_sink(self, sink: list) -> None:
+        """Register an uncapped side channel that every subsequent
+        ``decide`` appends its log entry to. Callers own the list's
+        lifetime and MUST detach it (``remove_decision_sink``) when done
+        — used by ``PreprocessPipeline`` to attribute decisions to
+        stages even after ``decision_log`` hits its cap."""
+        self._decision_sinks.append(sink)
+
+    def remove_decision_sink(self, sink: list) -> None:
+        self._decision_sinks.remove(sink)
+
+    def decide_or_forced(
+        self,
+        method: Optional[str],
+        num_indices: int,
+        stream_len: int,
+        dtype=jnp.int32,
+        *,
+        bin_range: Optional[int] = None,
+        flat_values: bool = True,
+        kind: str = "bin",
+        op: str = "add",
+        mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
+    ) -> BinningDecision:
+        """``decide`` when the caller passed ``None``/"auto", else the
+        caller-forced method finalized at this shape — the one branch
+        every consumer entry point (pagerank, components, sharded
+        kernels) needs, kept here so none of them reach into
+        ``_finalize`` directly."""
+        if method in (None, "auto"):
+            return self.decide(
+                num_indices, stream_len, dtype, bin_range=bin_range,
+                flat_values=flat_values, kind=kind, op=op, mesh_shape=mesh_shape,
+            )
+        return self._finalize(method, num_indices, bin_range, "caller")
 
     def _decide_uncached(
         self, key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op

@@ -17,10 +17,21 @@ Variants:
   * ``build_csr_pb``        — Algorithm 2: coarse Binning at ``bin_range``
                               then per-bin fine grouping (Bin-Read).
   * ``build_csr_cobra``     — hierarchical (knob-free) COBRA execution.
+  * ``build_csr_sharded``   — mesh-distributed Algorithm 2 (DESIGN.md §9).
+
+``build_csr`` dispatches on a method name; ``build_csc`` builds the
+transposed layout (in-neighbors — what pull kernels consume) through the
+same dispatch via ``transpose_coo``, and ``build_csr_csc`` builds both
+layouts of one graph: one binned stream per direction (the src-keyed
+stream yields the CSR, the dst-keyed stream the CSC), one degree pass
+each, shared relabeled input (DESIGN.md §10.2).
 
 All Binning goes through the shared ``core.executor`` layer (DESIGN.md
 §3); this module only states the *stream* (edges keyed by src vertex)
-and the Bin-Read that follows.
+and the Bin-Read that follows. Degree counting is a commutative PB
+reduction and routes through ``PBExecutor.reduce_stream`` — the method
+(fused vs two-phase) is *decided*, never hardcoded, so the fused
+accumulator legality of DESIGN.md §8.1 is enforced here too.
 
 All variants produce a CSR whose per-vertex neighbor *sets* are equal;
 baseline/pb/cobra additionally preserve EL order within each vertex
@@ -34,18 +45,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import execute_binning, execute_reduce, get_default_executor
-from repro.core.graph import COO, CSR, degrees_from_coo, offsets_from_degrees
+from repro.core.executor import execute_binning, get_default_executor
+from repro.core.graph import COO, CSR, offsets_from_degrees, transpose_coo
 from repro.core.plan import CobraPlan
 
 
-def _degrees_fused(src, num_nodes, block=2048):
+def _degrees(src, num_nodes) -> jnp.ndarray:
     """Degree counting IS a commutative PB reduction (add of ones), so it
-    runs on the fused single-sweep path (DESIGN.md §8). The neighbor
-    *placement* that follows is order-sensitive and stays two-phase."""
-    ones = jnp.ones(src.shape, jnp.int32)
-    return execute_reduce(
-        src, ones, out_size=num_nodes, op="add", method="fused", block=block
+    routes through the executor's reduce path — ``decide`` picks fused
+    only when the dense accumulator fits (DESIGN.md §8.1); oversized
+    domains fall back to the two-phase tree. The neighbor *placement*
+    that follows is order-sensitive and stays two-phase."""
+    return get_default_executor().reduce_stream(
+        src, jnp.ones(src.shape, jnp.int32), out_size=num_nodes, op="add"
     )
 
 
@@ -80,8 +92,7 @@ def build_csr_baseline(coo: COO) -> CSR:
 @functools.partial(
     jax.jit, static_argnames=("num_nodes", "bin_range", "method", "block", "plan")
 )
-def _pb_build(src, dst, num_nodes, bin_range, method="sort", block=2048, plan=None):
-    degrees = _degrees_fused(src, num_nodes, block=block)
+def _pb_build(src, dst, degrees, num_nodes, bin_range, method="sort", block=2048, plan=None):
     offsets = offsets_from_degrees(degrees)
     num_bins = -(-num_nodes // bin_range)
     # Phase 1: Binning (coarse range) through the shared executor core.
@@ -100,11 +111,17 @@ def _pb_build(src, dst, num_nodes, bin_range, method="sort", block=2048, plan=No
 
 
 def build_csr_pb(
-    coo: COO, bin_range: int | None = None, method: str = "sort", block: int = 2048
+    coo: COO,
+    bin_range: int | None = None,
+    method: str = "sort",
+    block: int = 2048,
+    degrees: jnp.ndarray | None = None,
 ) -> CSR:
     """Algorithm 2 EL->CSR (paper Table 1's NeighPop row). ``method`` is
     any executor method, or "auto" to let the executor decide; a ``None``
-    bin_range asks the executor for the planned range."""
+    bin_range asks the executor for the planned range. ``degrees`` skips
+    the degree pass when the caller already holds the src histogram (the
+    preprocessing pipeline shares its stage-1 pass this way)."""
     if method == "auto" or bin_range is None:
         d = get_default_executor().decide(
             coo.num_nodes, coo.num_edges, coo.src.dtype, bin_range=bin_range
@@ -115,9 +132,11 @@ def build_csr_pb(
     if method == "hierarchical":
         plan = CobraPlan.from_hardware(coo.num_nodes, final_bin_range=bin_range)
         bin_range = plan.final_bin_range
+    if degrees is None:
+        degrees = _degrees(coo.src, coo.num_nodes)
     offsets, neighs = _pb_build(
-        coo.src, coo.dst, coo.num_nodes, bin_range, method=method, block=block,
-        plan=plan,
+        coo.src, coo.dst, degrees, coo.num_nodes, bin_range, method=method,
+        block=block, plan=plan,
     )
     return CSR(offsets, neighs, coo.num_nodes)
 
@@ -137,26 +156,108 @@ def build_csr_sharded(
     return shard_build_csr(coo, mesh, axis_name=axis_name, capacity=capacity)
 
 
-def build_csr_cobra(coo: COO, plan: CobraPlan | None = None) -> CSR:
+def build_csr_cobra(
+    coo: COO, plan: CobraPlan | None = None, degrees: jnp.ndarray | None = None
+) -> CSR:
     """Knob-free COBRA build (paper §4): hierarchical executor method."""
     plan = plan or CobraPlan.from_hardware(coo.num_nodes)
+    if degrees is None:
+        degrees = _degrees(coo.src, coo.num_nodes)
     offsets, neighs = _pb_build(
-        coo.src, coo.dst, coo.num_nodes, plan.final_bin_range,
+        coo.src, coo.dst, degrees, coo.num_nodes, plan.final_bin_range,
         method="hierarchical", plan=plan,
     )
     return CSR(offsets, neighs, coo.num_nodes)
 
 
+# ---------------------------------------------------------------------------
+# Method dispatch + the dual-layout build (DESIGN.md §10.2).
+# ---------------------------------------------------------------------------
+
+BUILD_METHODS = ("baseline", "pb", "cobra", "sharded", "auto")
+
+
+def build_csr(
+    coo: COO,
+    method: str = "auto",
+    bin_range: int | None = None,
+    block: int = 2048,
+    mesh=None,
+    axis_name: str | None = None,
+    degrees: jnp.ndarray | None = None,
+) -> CSR:
+    """EL->CSR through one named build variant. ``auto`` is the
+    executor-decided PB build; ``sharded`` distributes over ``mesh``
+    (falling back to the single-device auto build without one).
+    ``degrees`` (a precomputed src histogram) spares the PB builds their
+    degree pass; the baseline and sharded paths compute their own."""
+    if method in ("auto", "pb"):
+        m = "auto" if method == "auto" else "sort"
+        return build_csr_pb(
+            coo, bin_range=bin_range, method=m, block=block, degrees=degrees
+        )
+    if method == "baseline":
+        return build_csr_baseline(coo)
+    if method == "cobra":
+        plan = CobraPlan.from_hardware(coo.num_nodes, final_bin_range=bin_range)
+        return build_csr_cobra(coo, plan, degrees=degrees)
+    if method == "sharded":
+        return build_csr_sharded(coo, mesh=mesh, axis_name=axis_name)
+    raise ValueError(
+        f"unknown build method: {method!r} (want one of {BUILD_METHODS})"
+    )
+
+
+def build_csc(
+    coo: COO,
+    method: str = "auto",
+    bin_range: int | None = None,
+    block: int = 2048,
+    mesh=None,
+    axis_name: str | None = None,
+) -> CSR:
+    """EL->CSC: the CSR of the transposed graph (in-neighbor lists —
+    the layout pull kernels like ``pagerank_csr_pull`` consume). The
+    dst-keyed edge stream runs the SAME PB pipeline as the CSR build;
+    only the stream key flips (``transpose_coo``)."""
+    return build_csr(
+        transpose_coo(coo), method=method, bin_range=bin_range, block=block,
+        mesh=mesh, axis_name=axis_name,
+    )
+
+
+def build_csr_csc(
+    coo: COO,
+    method: str = "auto",
+    bin_range: int | None = None,
+    block: int = 2048,
+    mesh=None,
+    axis_name: str | None = None,
+):
+    """Dual-layout build: ``(CSR, CSC)`` of one graph. Each direction is
+    one binned stream (src-keyed for push, dst-keyed for pull) through
+    the shared executor — so a pipeline that needs both layouts pays two
+    single-sweep builds over the same Edgelist, not a build plus an
+    ad-hoc transpose of the finished CSR (DESIGN.md §10.2)."""
+    kw = dict(
+        method=method, bin_range=bin_range, block=block, mesh=mesh,
+        axis_name=axis_name,
+    )
+    return build_csr(coo, **kw), build_csc(coo, **kw)
+
+
 def csr_equal_as_sets(a: CSR, b: CSR) -> bool:
     """Same graph irrespective of in-neighborhood order (unordered
-    parallelism's allowed freedom)."""
-    if not np.array_equal(np.asarray(a.offsets), np.asarray(b.offsets)):
+    parallelism's allowed freedom). Vectorized: one segment-sort via
+    ``np.lexsort`` on (vertex, neighbor) per side — no Python loop over
+    vertices, so large-graph tests stay cheap."""
+    ao, bo = np.asarray(a.offsets), np.asarray(b.offsets)
+    if not np.array_equal(ao, bo):
         return False
-    ao, an = np.asarray(a.offsets), np.asarray(a.neighs)
-    bn = np.asarray(b.neighs)
-    for v in range(a.num_nodes):
-        sa = np.sort(an[ao[v] : ao[v + 1]])
-        sb = np.sort(bn[ao[v] : ao[v + 1]])
-        if not np.array_equal(sa, sb):
-            return False
-    return True
+    an, bn = np.asarray(a.neighs), np.asarray(b.neighs)
+    if an.shape != bn.shape:
+        return False
+    # owning vertex of every neighbor slot; offsets are equal, so one
+    # segment array serves both sides
+    seg = np.repeat(np.arange(a.num_nodes), np.diff(ao))
+    return np.array_equal(an[np.lexsort((an, seg))], bn[np.lexsort((bn, seg))])

@@ -181,10 +181,9 @@ def pagerank_fused(coo: COO, iters: int = 10, method: str | None = None) -> PRRe
     (reduce candidate set); any ``REDUCE_METHODS`` entry forces a path.
     """
     ex = get_default_executor()
-    if method is None or method == "auto":
-        d = ex.decide(coo.num_nodes, coo.num_edges, jnp.float32, kind="reduce")
-    else:
-        d = ex._finalize(method, coo.num_nodes, None, "caller")
+    d = ex.decide_or_forced(
+        method, coo.num_nodes, coo.num_edges, jnp.float32, kind="reduce"
+    )
     r = _pr_fused(
         coo.src, coo.dst, coo.num_nodes, iters, d.method, d.bin_range,
         d.num_bins, ex.block, d.plan,
@@ -193,7 +192,10 @@ def pagerank_fused(coo: COO, iters: int = 10, method: str | None = None) -> PRRe
 
 
 @functools.lru_cache(maxsize=32)
-def _pr_sharded_fn(mesh, axis, num_nodes, n_dev, r, iters, method, block, capacity):
+def _pr_sharded_fn(
+    mesh, axis, num_nodes, n_dev, r, iters, method, block, capacity,
+    bin_range=None, plan=None,
+):
     from repro.compat import shard_map
     from repro.core.distributed_pb import clamp_for_local_reduce, owner_exchange
     from repro.core.executor import execute_reduce
@@ -212,7 +214,8 @@ def _pr_sharded_fn(mesh, axis, num_nodes, n_dev, r, iters, method, block, capaci
             )
             owned = execute_reduce(
                 clamp_for_local_reduce(local_idx, r), local_val, out_size=r,
-                op="add", method=method, block=block,
+                op="add", method=method, bin_range=bin_range, plan=plan,
+                block=block,
             )
             # re-replicate ranks for the next iteration's gather: the
             # owned slices cross the interconnect once per iteration
@@ -238,7 +241,7 @@ def pagerank_sharded(
     mesh=None,
     iters: int = 10,
     axis_name: str | None = None,
-    method: str = "fused",
+    method: str | None = None,
     capacity: int | None = None,
 ) -> PRResult:
     """PageRank with the mesh-sharded PB reduction (DESIGN.md §9): edges
@@ -248,6 +251,10 @@ def pagerank_sharded(
     rank vector. Per-device HBM traffic over the edge stream drops with
     device count; only (contribution tuples + rank slices) cross the
     interconnect. ``mesh=None``/1 device degrades to ``pagerank_fused``.
+
+    ``method=None``/"auto" asks ``decide`` at the PER-DEVICE shape
+    (owned range, received stream) under the topology-extended cache key
+    — the device-local method is never hardcoded (DESIGN.md §8.1 / §9).
 
     Float summation trees differ per shard: equivalent to the
     single-device result to tolerance, not bit-exactly.
@@ -266,9 +273,16 @@ def pagerank_sharded(
     n, m = coo.num_nodes, coo.num_edges
     r = shard_range_for(n, n_dev)
     cap = capacity if capacity is not None else -(-max(m, 1) // n_dev)
+    d = ex.decide_or_forced(
+        method, r, n_dev * cap, jnp.float32, kind="reduce", op="add",
+        mesh_shape=tuple(sorted(mesh.shape.items())),
+    )
     outdeg = jnp.maximum(jnp.bincount(coo.src, length=n), 1).astype(jnp.float32)
     src_p = _pad_to_multiple(coo.src, n_dev, 0)
     dst_p = _pad_to_multiple(coo.dst, n_dev, n)
     ranks0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
-    fn = _pr_sharded_fn(mesh, axis, n, n_dev, r, iters, method, ex.block, cap)
+    fn = _pr_sharded_fn(
+        mesh, axis, n, n_dev, r, iters, d.method, ex.block, cap,
+        d.bin_range, d.plan,
+    )
     return PRResult(fn(src_p, dst_p, outdeg, ranks0), iters)

@@ -5,15 +5,34 @@ simultaneously (dense frontier bitmaps — the JAX-friendly formulation)
 and taking the max eccentricity observed. Used by benchmarks to show
 that reordering (whose cost is CSR rebuild = Neighbor-Populate) pays off
 end-to-end.
+
+Semantics: ``k`` is clamped to ``num_nodes`` (sources are sampled
+without replacement, so more sources than vertices is not expressible),
+and the result carries a ``converged`` flag — True iff every frontier
+drained before ``max_iters``. When it is False the reported
+eccentricities are LOWER BOUNDS (levels beyond the iteration cap were
+never explored); consumers that compare radii across graph layouts must
+surface the flag instead of silently comparing truncated numbers.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.graph import CSR, segment_ids_from_offsets
+
+_INF = 0x7FFFFFFF
+
+
+class RadiiResult(NamedTuple):
+    """Per-source eccentricities + how the BFS terminated."""
+
+    ecc: jnp.ndarray  # (k,) max finite BFS level per source
+    iters: jnp.ndarray  # levels actually run
+    converged: jnp.ndarray  # bool: all frontiers drained before max_iters
 
 
 @functools.partial(jax.jit, static_argnames=("num_nodes", "num_edges", "k", "max_iters"))
@@ -21,7 +40,7 @@ def _radii(offsets, neighs, num_nodes, num_edges, k, max_iters, seed):
     seg = segment_ids_from_offsets(offsets, num_edges)  # edge -> src vertex
     key = jax.random.PRNGKey(seed)
     sources = jax.random.choice(key, num_nodes, shape=(k,), replace=False)
-    dist = jnp.full((k, num_nodes), jnp.int32(0x7FFFFFFF))
+    dist = jnp.full((k, num_nodes), jnp.int32(_INF))
     dist = dist.at[jnp.arange(k), sources].set(0)
     frontier = jnp.zeros((k, num_nodes), jnp.bool_).at[jnp.arange(k), sources].set(True)
 
@@ -35,15 +54,25 @@ def _radii(offsets, neighs, num_nodes, num_edges, k, max_iters, seed):
         # frontier[:, src[e]]; next[:, dst[e]] |= active
         src_active = frontier[:, seg]  # (k, m) via gather on edge sources
         nxt = jnp.zeros_like(frontier).at[:, neighs].max(src_active)
-        nxt = jnp.logical_and(nxt, dist == 0x7FFFFFFF)
+        nxt = jnp.logical_and(nxt, dist == _INF)
         dist = jnp.where(nxt, it + 1, dist)
         return dist, nxt, it + 1
 
-    dist, _, it = jax.lax.while_loop(cond, body, (dist, frontier, jnp.int32(0)))
-    ecc = jnp.where(dist == 0x7FFFFFFF, 0, dist).max(axis=1)
-    return ecc, it
+    dist, frontier, it = jax.lax.while_loop(cond, body, (dist, frontier, jnp.int32(0)))
+    # a non-empty frontier at exit means the iteration cap cut BFS short:
+    # the eccentricities below are then lower bounds, not the truth
+    converged = jnp.logical_not(frontier.any())
+    ecc = jnp.where(dist == _INF, 0, dist).max(axis=1)
+    return ecc, it, converged
 
 
-def radii(csr: CSR, k: int = 8, max_iters: int = 512, seed: int = 0):
-    """Per-source eccentricities and iteration count."""
-    return _radii(csr.offsets, csr.neighs, csr.num_nodes, csr.num_edges, k, max_iters, seed)
+def radii(csr: CSR, k: int = 8, max_iters: int = 512, seed: int = 0) -> RadiiResult:
+    """k-source eccentricities. ``k`` is clamped to the vertex count
+    (sampling without replacement cannot draw more); check ``converged``
+    before trusting the values — False means ``max_iters`` truncated the
+    BFS and the eccentricities underreport."""
+    k = max(1, min(k, csr.num_nodes))
+    ecc, it, converged = _radii(
+        csr.offsets, csr.neighs, csr.num_nodes, csr.num_edges, k, max_iters, seed
+    )
+    return RadiiResult(ecc, it, converged)

@@ -1,44 +1,135 @@
-"""Lightweight graph reordering (degree sort) — paper Fig. 2b context.
+"""Lightweight graph reordering — paper Fig. 2b context, DESIGN.md §10.
 
-Degree-sorting relabels vertices by descending degree so hot vertices
-share cache lines. The expensive part is *rebuilding the CSR under the
-new ids* — which is exactly Neighbor-Populate again, hence PB/COBRA
-accelerate reordering too (the paper's point that pre-processing is a
-PB workload).
+Reordering relabels vertices so hot vertices share cache lines. The
+expensive part is *rebuilding the CSR under the new ids* — which is
+exactly Neighbor-Populate again, hence PB/COBRA accelerate reordering
+too (the paper's point that pre-processing is a PB workload).
+
+Which lightweight mapping to use is the decision that matters in
+practice (Cagra; the graph pre-processing surveys), so the mapping is a
+*registry* of variants rather than one hardcoded sort:
+
+  ``identity``     — no-op control (amortization baseline).
+  ``random``       — seeded random permutation control (worst case:
+                     destroys whatever locality the input ids had).
+  ``degree_sort``  — full descending-degree sort (stable).
+  ``hub_sort``     — hubs (degree > average) first in degree order; the
+                     tail keeps its original relative order untouched,
+                     preserving any pre-existing locality there.
+  ``dbg``          — degree-based grouping: coarse log2-degree buckets,
+                     hot buckets first, original order within a bucket —
+                     cheaper than a full sort, most of the benefit.
+
+Every variant maps a degree array to ``new_id[old_id]``; the degree
+count itself is a commutative PB reduction routed through the executor
+(``decide`` picks the method — the fused single sweep only when its
+accumulator legally fits, DESIGN.md §8.1).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import COO, CSR, degrees_from_coo
-from repro.core.neighbor_populate import (
-    build_csr_baseline,
-    build_csr_cobra,
-    build_csr_pb,
-)
-from repro.core.plan import CobraPlan
+from repro.core.graph import COO, CSR
+
+
+# ---------------------------------------------------------------------------
+# Mapping variants: degrees (n,) -> new_id[old_id] (n,). All jitted with
+# static num_nodes; all return permutations of [0, n).
+# ---------------------------------------------------------------------------
+
+
+def _ids_from_order(order: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
+    """order holds old ids in new-id order; invert to new_id[old_id]."""
+    return jnp.zeros((num_nodes,), jnp.int32).at[order].set(
+        jnp.arange(num_nodes, dtype=jnp.int32)
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("num_nodes",))
-def degree_sort_mapping(src, num_nodes) -> jnp.ndarray:
-    """new_id[old_id]: descending-degree relabelling (stable). The degree
-    histogram is a commutative add, so it runs on the executor's fused
-    single-sweep path (DESIGN.md §8)."""
-    from repro.core.executor import execute_reduce
+def _identity_ids(deg, num_nodes, seed):
+    return jnp.arange(num_nodes, dtype=jnp.int32)
 
-    deg = execute_reduce(
-        src, jnp.ones(src.shape, jnp.int32), out_size=num_nodes, op="add",
-        method="fused",
-    )
+
+@functools.partial(jax.jit, static_argnames=("num_nodes",))
+def _random_ids(deg, num_nodes, seed):
+    order = jax.random.permutation(jax.random.PRNGKey(seed), num_nodes)
+    return _ids_from_order(order.astype(jnp.int32), num_nodes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes",))
+def _degree_sort_ids(deg, num_nodes, seed):
     order = jnp.argsort(-deg, stable=True)  # old ids in new order
-    new_ids = jnp.zeros((num_nodes,), jnp.int32).at[order].set(
-        jnp.arange(num_nodes, dtype=jnp.int32)
-    )
-    return new_ids
+    return _ids_from_order(order, num_nodes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes",))
+def _hub_sort_ids(deg, num_nodes, seed):
+    """Hubs (degree > average) first, sorted by descending degree; the
+    tail is untouched: all non-hubs share one sort key, so the stable
+    argsort keeps their original relative order."""
+    avg = jnp.sum(deg) // jnp.maximum(num_nodes, 1)
+    is_hub = deg > avg
+    key = jnp.where(is_hub, -deg, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)
+    return _ids_from_order(order, num_nodes)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes",))
+def _dbg_ids(deg, num_nodes, seed):
+    """Degree-based grouping: bucket = floor(log2(deg+1)) — a handful of
+    coarse groups instead of a full sort. Hot buckets first; within a
+    bucket, original order (stable argsort on the bucket key only)."""
+    bucket = jnp.int32(jnp.floor(jnp.log2(deg.astype(jnp.float32) + 1.0)))
+    order = jnp.argsort(-bucket, stable=True)
+    return _ids_from_order(order, num_nodes)
+
+
+# name -> mapping fn(deg, num_nodes, seed) -> new_ids. The registry the
+# preprocessing pipeline iterates (DESIGN.md §10.1).
+REORDER_VARIANTS: Dict[str, Callable] = {
+    "identity": _identity_ids,
+    "random": _random_ids,
+    "degree_sort": _degree_sort_ids,
+    "hub_sort": _hub_sort_ids,
+    "dbg": _dbg_ids,
+}
+
+
+def reorder_mapping(
+    variant: str, src: jnp.ndarray, num_nodes: int, *, seed: int = 0,
+    degrees: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """``new_id[old_id]`` for a registered variant.
+
+    The degree histogram is a commutative add routed through the
+    executor (``decide(kind="reduce")`` — no hardcoded method, so the
+    fused path is only taken when ``fused_fits`` holds, DESIGN.md §8.1).
+    Pass ``degrees`` to reuse an already-computed histogram (the
+    preprocessing pipeline does, sharing one degree pass across stages).
+    """
+    if variant not in REORDER_VARIANTS:
+        raise ValueError(
+            f"unknown reorder variant: {variant!r} (want one of "
+            f"{tuple(REORDER_VARIANTS)})"
+        )
+    if degrees is None:
+        from repro.core.executor import get_default_executor
+
+        degrees = get_default_executor().reduce_stream(
+            src, jnp.ones(src.shape, jnp.int32), out_size=num_nodes, op="add"
+        )
+    return REORDER_VARIANTS[variant](degrees, num_nodes, seed)
+
+
+def degree_sort_mapping(src, num_nodes) -> jnp.ndarray:
+    """new_id[old_id]: descending-degree relabelling (stable). Kept as
+    the named entry point the original Fig. 2b pipeline used; now a
+    registry call — the executor decides the degree-count method."""
+    return reorder_mapping("degree_sort", src, num_nodes)
 
 
 def relabel_coo(coo: COO, new_ids: jnp.ndarray) -> COO:
@@ -49,18 +140,27 @@ def relabel_coo(coo: COO, new_ids: jnp.ndarray) -> COO:
     )
 
 
-def degree_sort_rebuild(
-    coo: COO, method: str = "baseline", bin_range: int = 1 << 14
+def reorder_rebuild(
+    coo: COO,
+    variant: str = "degree_sort",
+    method: str = "baseline",
+    bin_range: int | None = None,
+    seed: int = 0,
 ) -> Tuple[CSR, jnp.ndarray]:
-    """Full lightweight-reordering pipeline: mapping + relabel + rebuild."""
-    new_ids = degree_sort_mapping(coo.src, coo.num_nodes)
+    """Full lightweight-reordering pipeline for one variant: mapping +
+    relabel + CSR rebuild (any ``neighbor_populate.build_csr`` method).
+    The orchestrated multi-stage version with per-stage reporting lives
+    in ``core/preprocess.py`` (DESIGN.md §10)."""
+    from repro.core.neighbor_populate import build_csr
+
+    new_ids = reorder_mapping(variant, coo.src, coo.num_nodes, seed=seed)
     relabeled = relabel_coo(coo, new_ids)
-    if method == "baseline":
-        csr = build_csr_baseline(relabeled)
-    elif method == "pb":
-        csr = build_csr_pb(relabeled, bin_range)
-    elif method == "cobra":
-        csr = build_csr_cobra(relabeled, CobraPlan.from_hardware(coo.num_nodes))
-    else:
-        raise ValueError(method)
+    csr = build_csr(relabeled, method=method, bin_range=bin_range)
     return csr, new_ids
+
+
+def degree_sort_rebuild(
+    coo: COO, method: str = "baseline", bin_range: int | None = None
+) -> Tuple[CSR, jnp.ndarray]:
+    """Back-compat wrapper: ``reorder_rebuild`` at variant=degree_sort."""
+    return reorder_rebuild(coo, "degree_sort", method=method, bin_range=bin_range)

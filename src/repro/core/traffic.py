@@ -351,6 +351,70 @@ def sharded_fused_seconds_per_device(
     return local + exch / ici_bandwidth
 
 
+# --- Pre-processing pipeline counters (DESIGN.md §10) ---------------------
+#
+# The preprocessing pipeline (core/preprocess.py) is a composition of PB
+# stages; each gets an explicit sequential-byte counter so the pipeline's
+# PreprocessReport can put modeled traffic next to measured wall-clock,
+# and fig2_preproc_cost.py can report the amortization point on the same
+# byte model the rest of the repo uses.
+
+
+def degrees_stage_bytes(
+    num_tuples: int, num_indices: int, index_bytes: int = 4,
+    value_bytes_per_index: int = 4,
+) -> float:
+    """Fused degree count: read the src index stream once, write the
+    dense degree array once (the ones-values stream never exists — it is
+    synthesized on chip)."""
+    return float(num_tuples) * index_bytes + float(num_indices) * value_bytes_per_index
+
+
+def mapping_stage_bytes(num_indices: int, value_bytes_per_index: int = 4) -> float:
+    """Reorder-variant mapping: read the degree array, write the sorted
+    order, write the inverted new-id table — three n-sized sweeps (the
+    sort's internal passes are fast-level resident at vertex-array
+    sizes)."""
+    return 3.0 * num_indices * value_bytes_per_index
+
+
+def relabel_stage_bytes(num_tuples: int, index_bytes: int = 4) -> float:
+    """Relabel: read both endpoint arrays, write both relabeled arrays —
+    4 sequential sweeps. (The new-id gathers are random accesses into
+    the n-sized mapping; at vertex-array sizes that table is fast-level
+    resident, so this counter charges only the streams.)"""
+    return 4.0 * num_tuples * index_bytes
+
+
+def csr_build_stage_bytes(
+    num_tuples: int, num_indices: int, build_method: str = "pb"
+) -> float:
+    """Sequential bytes of ONE EL->CSR (or EL->CSC) build. The baseline
+    single-shot sort moves the tuple stream twice (read + permuted
+    write) plus the offsets; PB/COBRA pay the two-phase stream
+    (Binning write + Bin-Read re-read) modeled by
+    ``pb_two_phase_stream_bytes``."""
+    if build_method == "baseline":
+        return 2.0 * num_tuples * TUPLE_BYTES + num_indices * 4.0
+    return pb_two_phase_stream_bytes(num_tuples, num_indices)
+
+
+def preproc_stage_bytes(
+    stage: str, num_tuples: int, num_indices: int, build_method: str = "pb"
+) -> float:
+    """Modeled sequential bytes of one named pipeline stage — the single
+    lookup ``PreprocessReport`` records per stage (DESIGN.md §10.3)."""
+    if stage == "degrees":
+        return degrees_stage_bytes(num_tuples, num_indices)
+    if stage == "mapping":
+        return mapping_stage_bytes(num_indices)
+    if stage == "relabel":
+        return relabel_stage_bytes(num_tuples)
+    if stage in ("build_csr", "build_csc"):
+        return csr_build_stage_bytes(num_tuples, num_indices, build_method)
+    raise ValueError(f"unknown preprocess stage: {stage!r}")
+
+
 def pb_seconds(
     num_tuples: int, num_indices: int, bin_range: int, hw: HardwareModel
 ) -> float:

@@ -297,6 +297,56 @@ class ShardedPBStreamRoofline:
         return single / max(self.t_step, 1e-30)
 
 
+@dataclass(frozen=True)
+class PreprocessRoofline:
+    """HBM-roofline view of the preprocessing pipeline (DESIGN.md §10):
+    the modeled sequential bytes of every stage (degrees + mapping +
+    relabel + per-direction builds) against the per-iteration bytes of a
+    downstream kernel. ``amortization_iters`` is the byte-model analogue
+    of ``preprocess.amortization_iters``: iterations of the downstream
+    kernel needed before the reorder's per-iteration byte saving has
+    paid for the pipeline — ``inf`` when the reordered layout moves no
+    fewer bytes (locality gains that don't change sequential traffic are
+    invisible to this counter; the measured column in
+    fig2_preproc_cost.py captures those)."""
+
+    num_tuples: int
+    num_indices: int
+    dual: bool = True
+    build_method: str = "pb"
+    hbm_bw: float = 819e9
+
+    @property
+    def stage_bytes(self) -> Dict[str, float]:
+        from repro.core.traffic import preproc_stage_bytes
+
+        stages = ["degrees", "mapping", "relabel", "build_csr"]
+        if self.dual:
+            stages.append("build_csc")
+        return {
+            s: preproc_stage_bytes(
+                s, self.num_tuples, self.num_indices, self.build_method
+            )
+            for s in stages
+        }
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.stage_bytes.values())
+
+    @property
+    def t_preproc(self) -> float:
+        return self.total_bytes / self.hbm_bw
+
+    def amortization_iters(
+        self, iter_bytes_before: float, iter_bytes_after: float
+    ) -> float:
+        saved = iter_bytes_before - iter_bytes_after
+        if saved <= 0.0:
+            return float("inf")
+        return self.total_bytes / saved
+
+
 def extrapolate(c_a: CellCost, c_b: CellCost, num_layers: int) -> CellCost:
     dl = c_b.num_layers - c_a.num_layers
     assert dl > 0

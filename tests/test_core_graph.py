@@ -104,8 +104,9 @@ def test_radii_on_grid_is_known():
     # at most 62 (corner-to-corner Manhattan) and at least 31.
     g = SUITE["EURO"]
     csr = build_csr_baseline(g)
-    ecc, iters = radii(csr, k=4, max_iters=200)
-    ecc = np.asarray(ecc)
+    res = radii(csr, k=4, max_iters=200)
+    assert bool(res.converged)
+    ecc = np.asarray(res.ecc)
     assert (ecc >= 31).all() and (ecc <= 62).all()
 
 

@@ -75,10 +75,11 @@ def test_radii_path_graph_diameter():
     diameter of a path graph, and BFS stops after diameter levels."""
     n = 17
     csr = _path_graph(n)
-    ecc, iters = radii(csr, k=n, max_iters=64, seed=0)
-    assert int(jnp.max(ecc)) == n - 1
+    res = radii(csr, k=n, max_iters=64, seed=0)
+    assert int(jnp.max(res.ecc)) == n - 1
     # diameter discovery rounds + one trailing empty round (fixpoint)
-    assert int(iters) == n
+    assert int(res.iters) == n
+    assert bool(res.converged)
 
 
 def test_radii_cycle_graph():
@@ -87,7 +88,7 @@ def test_radii_cycle_graph():
     src = np.concatenate([a, (a + 1) % n])
     dst = np.concatenate([(a + 1) % n, a])
     csr = _csr_from_edges(src, dst, n)
-    ecc, _ = radii(csr, k=n, max_iters=64, seed=1)
+    ecc = radii(csr, k=n, max_iters=64, seed=1).ecc
     # every vertex of a cycle has eccentricity n//2
     assert np.array_equal(np.asarray(ecc), np.full(n, n // 2))
 
@@ -98,7 +99,7 @@ def test_radii_matches_bfs_oracle():
     src = np.concatenate([np.asarray(g.src), np.asarray(g.dst)])
     dst = np.concatenate([np.asarray(g.dst), np.asarray(g.src)])
     csr = _csr_from_edges(src, dst, g.num_nodes)
-    ecc, _ = radii(csr, k=g.num_nodes, max_iters=512, seed=2)
+    ecc = radii(csr, k=g.num_nodes, max_iters=512, seed=2).ecc
 
     # numpy BFS oracle: eccentricity within each vertex's component
     off, nei = np.asarray(csr.offsets), np.asarray(csr.neighs)
@@ -121,3 +122,26 @@ def test_radii_matches_bfs_oracle():
     # source order is a permutation — compare as multisets per vertex by
     # sorting both eccentricity vectors
     assert np.array_equal(np.sort(np.asarray(ecc)), np.sort(want))
+
+
+def test_radii_clamps_oversized_k():
+    """k > num_nodes used to crash jax.random.choice(replace=False);
+    now it clamps to the vertex count."""
+    n = 9
+    csr = _path_graph(n)
+    res = radii(csr, k=n * 100, max_iters=64, seed=3)
+    assert res.ecc.shape == (n,)
+    assert int(jnp.max(res.ecc)) == n - 1
+
+
+def test_radii_reports_truncation():
+    """Hitting max_iters used to silently underreport eccentricities as
+    if unreached vertices were at distance 0; now the result says so."""
+    n = 17
+    csr = _path_graph(n)
+    full = radii(csr, k=n, max_iters=64, seed=0)
+    cut = radii(csr, k=n, max_iters=3, seed=0)
+    assert bool(full.converged) and not bool(cut.converged)
+    # the truncated run's eccentricities are lower bounds
+    assert int(jnp.max(cut.ecc)) <= int(jnp.max(full.ecc))
+    assert int(cut.iters) == 3
