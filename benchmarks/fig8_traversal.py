@@ -1,0 +1,112 @@
+"""Fig 8 (beyond-paper): frontier traversal workloads on the PB executor.
+
+BFS / SSSP / k-core (core/traversal.py, DESIGN.md §11) across the
+5-graph suite: wall-clock of the executor-decided run against the
+unbinned ``segment_min``-style dense-scatter baseline, the modeled
+byte ceiling (``roofline.TraversalRoofline``), and — the frontier
+story — the PER-LEVEL method decisions, each taken at the level's
+bucketed stream shape under the executor's bucketed reduce cache keys
+(a short frontier never replays a full-stream entry). Sources are the
+max-out-degree vertex so every graph actually traverses.
+
+Run standalone with ``--smoke`` for the CI-sized pass; under
+``benchmarks/run.py --smoke`` these rows land in BENCH_smoke.json (the
+key-set the scripts/check_bench_rows.py regression guard protects).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Rows, graph_scale, time_fn
+from repro.core import bfs, build_csr, graph_suite, k_core, sssp
+from repro.core.traffic import traversal_bytes
+from repro.roofline import TraversalRoofline
+
+KCORE_K = 3
+
+
+def _decision_trace(decisions) -> str:
+    """Compact per-level method trace: L<level>:<method>@2^<log2 len>,
+    the len being the level's bucketed (padded) stream length."""
+    per_level: dict = {}
+    for d in decisions:
+        per_level.setdefault(d.get("level", -1), d)
+    items = [
+        f"L{lvl}:{d['method']}@2^{int(np.log2(max(d['stream_len'], 1)))}"
+        for lvl, d in sorted(per_level.items())[:12]
+    ]
+    return " ".join(items) + (" ..." if len(per_level) > 12 else "")
+
+
+def run() -> Rows:
+    rows = Rows()
+    suite = graph_suite(graph_scale())
+    for name, g in suite.items():
+        csr = build_csr(g, method="auto")
+        n = csr.num_nodes
+        src = int(np.argmax(np.diff(np.asarray(csr.offsets))))
+        rng = np.random.default_rng(8)
+        w = jnp.asarray(rng.random(csr.num_edges).astype(np.float32) + 0.1)
+
+        # BFS: executor-decided vs the unbinned dense-scatter baseline
+        r = bfs(csr, src, method="auto")
+        t_auto = time_fn(lambda c: bfs(c, src, method="auto").dist, csr)
+        t_unb = time_fn(lambda c: bfs(c, src, method="unbinned").dist, csr)
+        rl = TraversalRoofline(level_edges=r.level_edges, num_indices=n)
+        rows.add(
+            f"fig8/bfs/{name}",
+            t_auto * 1e6,
+            f"speedup_vs_unbinned={t_unb / max(t_auto, 1e-12):.2f} "
+            f"levels={r.levels} edges={rl.total_edges} "
+            f"modeled_bytes={traversal_bytes(r.level_edges, n):.3g} "
+            f"byte_ceiling={rl.speedup_ceiling:.2f} converged={r.converged}",
+        )
+        rows.add(
+            f"fig8/bfs_levels/{name}",
+            t_auto * 1e6,
+            f"frontier_sizes={list(r.frontier_sizes[:10])} "
+            f"decisions[{_decision_trace(r.decisions)}]",
+        )
+
+        # SSSP: min-relaxation rounds over weighted edges
+        s = sssp(csr, w, src, method="auto")
+        t_sssp = time_fn(lambda c: sssp(c, w, src, method="auto").dist, csr)
+        t_sssp_unb = time_fn(
+            lambda c: sssp(c, w, src, method="unbinned").dist, csr
+        )
+        rows.add(
+            f"fig8/sssp/{name}",
+            t_sssp * 1e6,
+            f"speedup_vs_unbinned={t_sssp_unb / max(t_sssp, 1e-12):.2f} "
+            f"rounds={s.levels} edges={sum(s.level_edges)} "
+            f"converged={s.converged}",
+        )
+
+        # k-core peeling: add-decrement rounds
+        kc = k_core(csr, KCORE_K, method="auto")
+        t_kc = time_fn(lambda c: k_core(c, KCORE_K, method="auto").in_core, csr)
+        t_kc_unb = time_fn(
+            lambda c: k_core(c, KCORE_K, method="unbinned").in_core, csr
+        )
+        core_frac = float(np.asarray(kc.in_core).mean())
+        rows.add(
+            f"fig8/kcore/{name}",
+            t_kc * 1e6,
+            f"speedup_vs_unbinned={t_kc_unb / max(t_kc, 1e-12):.2f} "
+            f"rounds={kc.rounds} core_frac={core_frac:.2f} "
+            f"converged={kc.converged}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        os.environ["BENCH_SCALE"] = "small"
+        os.environ.setdefault("REPRO_BENCH_REPS", "1")
+        os.environ.setdefault("REPRO_BENCH_WARMUP", "1")
+    for r in run().emit():
+        print(r)

@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.fig5_end2end",
     "benchmarks.fig6_breakdown",
     "benchmarks.fig7_scaling",
+    "benchmarks.fig8_traversal",
     "benchmarks.moe_dispatch",
     "benchmarks.embed_grad",
     "benchmarks.executor_autotune",
@@ -37,6 +38,7 @@ SMOKE_MODULES = [
     "benchmarks.fig2_preproc_cost",
     "benchmarks.fig6_breakdown",
     "benchmarks.fig7_scaling",
+    "benchmarks.fig8_traversal",
     "benchmarks.executor_autotune",
     "benchmarks.moe_dispatch",
 ]

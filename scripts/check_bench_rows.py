@@ -20,6 +20,21 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CURRENT = os.path.join(ROOT, "BENCH_smoke.json")
 
+# Row-name prefixes that MUST appear in every fresh smoke run regardless
+# of the committed baseline — the floor that stops a fresh clone (no
+# baseline yet) from silently shipping a smoke set that lost a whole
+# benchmark family. One entry per smoke module's row namespace.
+REQUIRED_PREFIXES = (
+    "table1/",
+    "fig2a/",
+    "fig2b/",
+    "fig6/",
+    "fig7/",
+    "fig8/",
+    "executor/",
+    "moe/",
+)
+
 
 def load_baseline(ref: str) -> dict | None:
     """A git ref (show HEAD:BENCH_smoke.json) or a plain file path."""
@@ -56,6 +71,14 @@ def main() -> int:
     ]
     if failed:
         errors.append(f"benchmark module(s) errored: {sorted(failed)}")
+    names = row_names(cur)
+    absent = [
+        p for p in REQUIRED_PREFIXES if not any(n.startswith(p) for n in names)
+    ]
+    if absent:
+        errors.append(
+            f"required row prefix(es) missing from the fresh run: {absent}"
+        )
     base = load_baseline(ref)
     if base is None:
         # no committed baseline yet (first run / shallow clone): only the

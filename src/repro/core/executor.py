@@ -83,7 +83,9 @@ REDUCE_METHODS = METHODS + ("fused",)
 # Commutative reductions the fused path may legally absorb on chip.
 # Anything else (neighbor placement, capacity-clipped dispatch, ...)
 # is order-sensitive and must keep the two-phase ``bin_stream`` path.
-REDUCE_OPS = ("add", "min")
+# ``min``/``max`` serve the frontier relaxations (SSSP, BFS parent
+# selection — core/traversal.py) and label propagation.
+REDUCE_OPS = ("add", "min", "max")
 
 # Below this stream length XLA's stable sort is latency-, not
 # bandwidth-bound, and always wins (DESIGN.md §3.1).
@@ -208,8 +210,10 @@ def _fused_reduce_jnp(
         upd = out.at[ib]
         if op == "add":
             out = upd.add(vb, mode="drop", indices_are_sorted=srt)
-        else:
+        elif op == "min":
             out = upd.min(vb, mode="drop", indices_are_sorted=srt)
+        else:  # max
+            out = upd.max(vb, mode="drop", indices_are_sorted=srt)
         return out, None
 
     out, _ = jax.lax.scan(step, out0, (idx_p, val_p))
@@ -450,6 +454,13 @@ _FALLBACK_TABLE = {
 }
 
 
+# Persisted-cache schema version. Bump on ANY change to the _key format:
+# entries under an old key format would never be looked up again, yet
+# merge-on-save would preserve them forever — versioning discards the
+# whole stale file instead. v2: reduce keys bucket stream_len (§11.3).
+_CACHE_SCHEMA_VERSION = 2
+
+
 class _AutotuneCache:
     """Measured-decision cache: in-memory dict + best-effort JSON persistence.
 
@@ -473,20 +484,51 @@ class _AutotuneCache:
         try:
             with open(self.path) as f:
                 blob = json.load(f)
-            if isinstance(blob, dict) and blob.get("version") == 1:
+            if isinstance(blob, dict) and blob.get("version") == _CACHE_SCHEMA_VERSION:
                 self.mem.update(blob.get("entries", {}))
         except (OSError, ValueError):
             pass
 
     def _save(self) -> None:
+        """Merge-on-save under an advisory lock: concurrent writers (the
+        8-device subprocess tests, parallel benchmark runs) each
+        measured *different* keys; the old read-once/overwrite-forever
+        dropped every entry another process persisted in between. Each
+        save re-reads the file, layers this process's entries on top,
+        and atomically replaces — with an ``flock`` around the
+        read-merge-write so two interleaved savers cannot race the
+        window between read and replace (on a conflicting key the later
+        saver wins: both values are real measurements of the same
+        shape). Locking degrades to best-effort merge where flock is
+        unavailable; persistence itself degrades silently as before."""
         if not self.persist_ok:
             return
         try:
             os.makedirs(self.dir, exist_ok=True)
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"version": 1, "entries": self.mem}, f, indent=1)
-            os.replace(tmp, self.path)
+            with open(self.path + ".lock", "w") as lockf:
+                try:
+                    import fcntl
+
+                    fcntl.flock(lockf, fcntl.LOCK_EX)  # released on close
+                except (ImportError, OSError):
+                    pass  # no flock (non-POSIX): merge still applies
+                merged: dict = {}
+                try:
+                    with open(self.path) as f:
+                        blob = json.load(f)
+                    if isinstance(blob, dict) and blob.get("version") == _CACHE_SCHEMA_VERSION:
+                        merged.update(blob.get("entries", {}))
+                except (OSError, ValueError):
+                    pass  # no file yet / torn read: nothing to merge
+                merged.update(self.mem)
+                tmp = f"{self.path}.tmp.{os.getpid()}"  # per-process tmp
+                with open(tmp, "w") as f:
+                    json.dump(
+                        {"version": _CACHE_SCHEMA_VERSION, "entries": merged},
+                        f,
+                        indent=1,
+                    )
+                os.replace(tmp, self.path)
         except OSError:
             self.persist_ok = False  # degrade to in-memory only
 
@@ -605,8 +647,17 @@ class PBExecutor:
         topo = f"d{jax.device_count()}"
         if mesh_shape:
             topo += "/" + "x".join(f"{a}{s}" for a, s in mesh_shape)
+        # Frontier policy (DESIGN.md §11): reduction streams arrive at
+        # every length a traversal level produces, so reduce entries key
+        # on the log2 BUCKET of stream_len — the same bucketing the
+        # fallback table uses. A short frontier then never replays a
+        # full-stream cache entry (different bucket), while nearby
+        # lengths share one measured decision instead of retuning per
+        # level. Binning entries keep the exact length (their consumers
+        # are whole-stream).
+        sl = f"b{_bucket(stream_len)}" if kind != "bin" else str(stream_len)
         base = (
-            f"{num_indices}:{stream_len}:{jnp.dtype(dtype).name}:"
+            f"{num_indices}:{sl}:{jnp.dtype(dtype).name}:"
             f"{jax.default_backend()}:{topo}"
         )
         if kind != "bin":
@@ -709,13 +760,20 @@ class PBExecutor:
             "bin_range": d.bin_range,
             "source": d.source,
         }
+        if kind != "bin":
+            entry["op"] = op
         if mesh_shape:
             entry["mesh"] = {a: s for a, s in mesh_shape}
+        self._log_decision(entry)
+        return d
+
+    def _log_decision(self, entry: dict) -> None:
+        """Append one decision record to the bounded shared log and every
+        registered uncapped sink."""
         if len(self.decision_log) < _DECISION_LOG_CAP:
             self.decision_log.append(entry)
         for sink in self._decision_sinks:
             sink.append(entry)
-        return d
 
     def add_decision_sink(self, sink: list) -> None:
         """Register an uncapped side channel that every subsequent
@@ -876,12 +934,35 @@ class PBExecutor:
     ) -> BatchedBins:
         """Batched-frontier path: indices (B, m). One decision for the
         whole batch (restricted to the vmap-able methods)."""
+        # per-stream values are 1-D iff the batched array is (B, m);
+        # (B, m, d) row values are NOT flat — the decision must know
+        flat = isinstance(values, jnp.ndarray) and values.ndim == 2
         if method in (None, "auto"):
             d = self.decide(
-                num_indices, int(indices.shape[1]), indices.dtype, bin_range=bin_range
+                num_indices,
+                int(indices.shape[1]),
+                indices.dtype,
+                bin_range=bin_range,
+                flat_values=flat,
             )
-            m = d.method if d.method in ("sort", "counting") else "sort"
-            d = self._finalize(m, num_indices, bin_range, d.source)
+            if d.method not in ("sort", "counting"):
+                # only the pure-XLA methods vmap; clamp to sort AND log
+                # the clamp under its own source tag so decision_log /
+                # BENCH rows report what actually ran, not the pre-clamp
+                # choice
+                d = self._finalize(
+                    "sort", num_indices, bin_range, f"{d.source}+batch-clamp"
+                )
+                self._log_decision(
+                    {
+                        "kind": "bin",
+                        "num_indices": num_indices,
+                        "stream_len": int(indices.shape[1]),
+                        "method": d.method,
+                        "bin_range": d.bin_range,
+                        "source": d.source,
+                    }
+                )
         else:
             d = self._finalize(method, num_indices, bin_range, "caller")
         return bin_streams_batched(

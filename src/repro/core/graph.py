@@ -230,12 +230,16 @@ def graph_suite(scale: str = "bench") -> dict:
     invocation dominates harness start-up.
     """
     if scale == "bench":
+        # the key's version suffix is DERIVED from GRAPH_GEN_VERSION:
+        # key text and the version embedded in the npz can never drift
+        # apart again (a hardcoded "_v1" once outlived a bump to v2)
+        v = f"v{GRAPH_GEN_VERSION}"
         return {
-            "DBP": cached_graph("powerlaw_n18_d8_s1_v1", lambda: gen_powerlaw(1 << 18, 8, seed=1)),
-            "KRON": cached_graph("kron_s18_d8_s2_v1", lambda: gen_kron(18, 8, seed=2)),
-            "URND": cached_graph("uniform_n18_d8_s3_v1", lambda: gen_uniform(1 << 18, 8, seed=3)),
-            "EURO": cached_graph("road_512_s4_v1", lambda: gen_road(512, seed=4)),
-            "HBUBL": cached_graph("bubbles_512_s5_v1", lambda: gen_bubbles(512, seed=5)),
+            "DBP": cached_graph(f"powerlaw_n18_d8_s1_{v}", lambda: gen_powerlaw(1 << 18, 8, seed=1)),
+            "KRON": cached_graph(f"kron_s18_d8_s2_{v}", lambda: gen_kron(18, 8, seed=2)),
+            "URND": cached_graph(f"uniform_n18_d8_s3_{v}", lambda: gen_uniform(1 << 18, 8, seed=3)),
+            "EURO": cached_graph(f"road_512_s4_{v}", lambda: gen_road(512, seed=4)),
+            "HBUBL": cached_graph(f"bubbles_512_s5_{v}", lambda: gen_bubbles(512, seed=5)),
         }
     return {
         "DBP": gen_powerlaw(1 << 10, 4, seed=1),

@@ -63,7 +63,12 @@ def reduce_identity(op: str, dtype) -> jnp.ndarray:
     if op == "min":
         big = jnp.iinfo(dt).max if jnp.issubdtype(dt, jnp.integer) else jnp.finfo(dt).max
         return jnp.array(big, dt)
-    raise ValueError(f"unknown reduce op: {op!r} (want 'add' or 'min')")
+    if op == "max":
+        small = (
+            jnp.iinfo(dt).min if jnp.issubdtype(dt, jnp.integer) else jnp.finfo(dt).min
+        )
+        return jnp.array(small, dt)
+    raise ValueError(f"unknown reduce op: {op!r} (want 'add', 'min' or 'max')")
 
 
 def starts_from_counts(counts: jnp.ndarray) -> jnp.ndarray:
@@ -197,7 +202,7 @@ def segment_ids_from_starts(starts: jnp.ndarray, stream_len: int) -> jnp.ndarray
 
 def bin_read_scatter_add(
     bins: Bins, out_size: int, out_dtype=jnp.float32, sorted_within: int | None = None
-) -> jnp.ndarray:
+):
     """Commutative Bin-Read: accumulate binned values into a dense output.
 
     Because the stream is sorted by bin (and bins are contiguous index
@@ -209,10 +214,13 @@ def bin_read_scatter_add(
     guarantee: it defaults to ``bins.bin_range`` and a caller that knows
     a tighter order (e.g. a stream pre-sorted by exact index) passes 1 to
     hand XLA the fact when it actually holds.
+
+    Pytree values reduce leafwise (one dense output per leaf), matching
+    what ``binning_sort``/``binning_counting`` accept on the way in.
     """
-    sw = bins.bin_range if sorted_within is None else sorted_within
-    out = jnp.zeros((out_size,) + bins.val.shape[1:], dtype=out_dtype)
-    return out.at[bins.idx].add(bins.val.astype(out_dtype), indices_are_sorted=sw <= 1)
+    return bin_read_reduce(
+        bins, out_size, op="add", out_dtype=out_dtype, sorted_within=sorted_within
+    )
 
 
 def bin_read_reduce(
@@ -221,20 +229,31 @@ def bin_read_reduce(
     op: str = "add",
     out_dtype=None,
     sorted_within: int | None = None,
-) -> jnp.ndarray:
-    """Commutative Bin-Read for any supported reduction (add | min).
+):
+    """Commutative Bin-Read for any supported reduction (add | min | max).
 
     The two-phase counterpart of the fused single-sweep path
     (``kernels/fused.py``): same result, one extra HBM round-trip for the
-    binned stream. Untouched indices hold the op's identity.
+    binned stream. Untouched indices hold the op's identity (zeros for
+    ``add``). Values may be a pytree — each leaf is reduced into its own
+    dense ``(out_size, ...)`` output, mirroring the pytree support of the
+    binning phase.
     """
-    dt = jnp.dtype(out_dtype or bins.val.dtype)
     sw = bins.bin_range if sorted_within is None else sorted_within
-    if op == "add":
-        return bin_read_scatter_add(bins, out_size, out_dtype=dt, sorted_within=sw)
-    ident = reduce_identity(op, dt)  # rejects unknown ops
-    out = jnp.full((out_size,) + bins.val.shape[1:], ident, dtype=dt)
-    return out.at[bins.idx].min(bins.val.astype(dt), indices_are_sorted=sw <= 1)
+    if op not in ("add", "min", "max"):
+        reduce_identity(op, jnp.float32)  # raises the canonical error
+
+    def one(v: jnp.ndarray) -> jnp.ndarray:
+        dt = jnp.dtype(out_dtype or v.dtype)
+        if op == "add":
+            out = jnp.zeros((out_size,) + v.shape[1:], dtype=dt)
+            return out.at[bins.idx].add(v.astype(dt), indices_are_sorted=sw <= 1)
+        out = jnp.full((out_size,) + v.shape[1:], reduce_identity(op, dt), dtype=dt)
+        upd = out.at[bins.idx]
+        apply = upd.min if op == "min" else upd.max
+        return apply(v.astype(dt), indices_are_sorted=sw <= 1)
+
+    return jax.tree.map(one, bins.val)
 
 
 @functools.partial(jax.jit, static_argnames=("out_size", "num_bins", "bin_range"))

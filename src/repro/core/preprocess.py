@@ -57,6 +57,11 @@ class StageReport:
     # bin_range, source per decided stream) — empty for pure-relabel
     # stages and for caller-forced methods
     decisions: Tuple[dict, ...] = ()
+    # wall-clock of the warmup pass (trace + compile + first run);
+    # ``seconds`` is the steady-state pass that follows. 0.0 when the
+    # pipeline ran cold (warmup=False) — then ``seconds`` includes
+    # compilation and must not feed amortization math.
+    compile_seconds: float = 0.0
 
     def describe(self) -> str:
         ms = ", ".join(
@@ -81,6 +86,10 @@ class PreprocessReport:
     @property
     def total_seconds(self) -> float:
         return sum(s.seconds for s in self.stages)
+
+    @property
+    def total_compile_seconds(self) -> float:
+        return sum(s.compile_seconds for s in self.stages)
 
     @property
     def total_modeled_bytes(self) -> float:
@@ -108,6 +117,7 @@ class PreprocessReport:
                 {
                     "name": s.name,
                     "seconds": s.seconds,
+                    "compile_seconds": s.compile_seconds,
                     "modeled_bytes": s.modeled_bytes,
                     "decisions": list(s.decisions),
                 }
@@ -155,6 +165,11 @@ class PreprocessPipeline:
                   through the sharded paths (DESIGN.md §9).
     executor:     the PBExecutor to route through (process default when
                   None) — its decision log feeds the report.
+    warmup:       run each stage once untimed before the timed pass
+                  (default True): ``StageReport.seconds`` is then
+                  steady-state and the warmup's wall-clock lands in
+                  ``StageReport.compile_seconds``. False times stages
+                  cold — only for measuring compile cost itself.
     """
 
     def __init__(
@@ -168,6 +183,7 @@ class PreprocessPipeline:
         axis_name: Optional[str] = None,
         executor: Optional[PBExecutor] = None,
         seed: int = 0,
+        warmup: bool = True,
     ):
         if variant not in REORDER_VARIANTS:
             raise ValueError(
@@ -187,6 +203,7 @@ class PreprocessPipeline:
         self.axis_name = axis_name
         self.executor = executor
         self.seed = seed
+        self.warmup = warmup
 
     # -- stage driver ------------------------------------------------------
 
@@ -194,7 +211,21 @@ class PreprocessPipeline:
         """Time one stage (synchronized), capturing the executor
         decisions it takes via an uncapped sink — the shared
         ``decision_log`` saturates at its cap, this channel never
-        drops a stage's entries."""
+        drops a stage's entries.
+
+        Stages used to be timed cold, so first-run numbers included JIT
+        trace/compile and skewed the fig2 amortization points. With
+        ``warmup`` (the default) an untimed first pass absorbs
+        compilation — its wall-clock is reported separately as
+        ``compile_seconds`` — and ``seconds`` is the steady-state pass
+        the amortization math wants. The sink is attached only around
+        the timed pass so decisions aren't double-counted (``decide``
+        runs on every invocation)."""
+        compile_s = 0.0
+        if self.warmup:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            compile_s = time.perf_counter() - t0
         sink: list = []
         ex.add_decision_sink(sink)
         t0 = time.perf_counter()
@@ -210,6 +241,7 @@ class PreprocessPipeline:
                 seconds=dt,
                 modeled_bytes=modeled_bytes,
                 decisions=tuple(sink),
+                compile_seconds=compile_s,
             )
         )
         return out

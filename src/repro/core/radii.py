@@ -1,10 +1,17 @@
 """Radii estimation (k-source BFS) — the downstream kernel of paper Fig. 2b.
 
-Estimates the graph radius by running BFS from k sampled sources
-simultaneously (dense frontier bitmaps — the JAX-friendly formulation)
-and taking the max eccentricity observed. Used by benchmarks to show
-that reordering (whose cost is CSR rebuild = Neighbor-Populate) pays off
+Estimates the graph radius by running BFS from k sampled sources and
+taking the max eccentricity observed. Used by benchmarks to show that
+reordering (whose cost is CSR rebuild = Neighbor-Populate) pays off
 end-to-end.
+
+Since DESIGN.md §11 this is itself a PB workload: each source runs the
+frontier-driven ``traversal.bfs`` — every BFS level is one ``op="min"``
+reduce stream through the executor — instead of the old hand-rolled
+dense-bitmap sweep that bypassed PB entirely. The Fig. 2b story
+(pre-processing amortized by a downstream kernel) is therefore measured
+on the same execution machinery as everything else, and the per-level
+method decisions surface in the result.
 
 Semantics: ``k`` is clamped to ``num_nodes`` (sources are sampled
 without replacement, so more sources than vertices is not expressible),
@@ -16,13 +23,14 @@ surface the flag instead of silently comparing truncated numbers.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.graph import CSR, segment_ids_from_offsets
+from repro.core.graph import CSR
+from repro.core.traversal import bfs
 
 _INF = 0x7FFFFFFF
 
@@ -31,48 +39,57 @@ class RadiiResult(NamedTuple):
     """Per-source eccentricities + how the BFS terminated."""
 
     ecc: jnp.ndarray  # (k,) max finite BFS level per source
-    iters: jnp.ndarray  # levels actually run
+    iters: jnp.ndarray  # levels actually run (max over sources)
     converged: jnp.ndarray  # bool: all frontiers drained before max_iters
+    decisions: Tuple[dict, ...] = ()  # executor decisions across all BFS
 
 
-@functools.partial(jax.jit, static_argnames=("num_nodes", "num_edges", "k", "max_iters"))
-def _radii(offsets, neighs, num_nodes, num_edges, k, max_iters, seed):
-    seg = segment_ids_from_offsets(offsets, num_edges)  # edge -> src vertex
-    key = jax.random.PRNGKey(seed)
-    sources = jax.random.choice(key, num_nodes, shape=(k,), replace=False)
-    dist = jnp.full((k, num_nodes), jnp.int32(_INF))
-    dist = dist.at[jnp.arange(k), sources].set(0)
-    frontier = jnp.zeros((k, num_nodes), jnp.bool_).at[jnp.arange(k), sources].set(True)
-
-    def cond(state):
-        _, frontier, it = state
-        return jnp.logical_and(frontier.any(), it < max_iters)
-
-    def body(state):
-        dist, frontier, it = state
-        # propagate each source's frontier along edges: edge e active if
-        # frontier[:, src[e]]; next[:, dst[e]] |= active
-        src_active = frontier[:, seg]  # (k, m) via gather on edge sources
-        nxt = jnp.zeros_like(frontier).at[:, neighs].max(src_active)
-        nxt = jnp.logical_and(nxt, dist == _INF)
-        dist = jnp.where(nxt, it + 1, dist)
-        return dist, nxt, it + 1
-
-    dist, frontier, it = jax.lax.while_loop(cond, body, (dist, frontier, jnp.int32(0)))
-    # a non-empty frontier at exit means the iteration cap cut BFS short:
-    # the eccentricities below are then lower bounds, not the truth
-    converged = jnp.logical_not(frontier.any())
-    ecc = jnp.where(dist == _INF, 0, dist).max(axis=1)
-    return ecc, it, converged
-
-
-def radii(csr: CSR, k: int = 8, max_iters: int = 512, seed: int = 0) -> RadiiResult:
-    """k-source eccentricities. ``k`` is clamped to the vertex count
-    (sampling without replacement cannot draw more); check ``converged``
-    before trusting the values — False means ``max_iters`` truncated the
-    BFS and the eccentricities underreport."""
+def radii(
+    csr: CSR,
+    k: int = 8,
+    max_iters: int = 512,
+    seed: int = 0,
+    *,
+    executor=None,
+    method: str = "auto",
+    mesh=None,
+    axis_name: Optional[str] = None,
+) -> RadiiResult:
+    """k-source eccentricities via frontier-driven PB BFS. ``k`` is
+    clamped to the vertex count (sampling without replacement cannot
+    draw more); check ``converged`` before trusting the values — False
+    means ``max_iters`` truncated at least one BFS and the
+    eccentricities underreport. ``method``/``mesh`` route every level's
+    reduce stream exactly as ``traversal.bfs`` does."""
     k = max(1, min(k, csr.num_nodes))
-    ecc, it, converged = _radii(
-        csr.offsets, csr.neighs, csr.num_nodes, csr.num_edges, k, max_iters, seed
+    key = jax.random.PRNGKey(seed)
+    sources = np.asarray(
+        jax.random.choice(key, csr.num_nodes, shape=(k,), replace=False)
     )
-    return RadiiResult(ecc, it, converged)
+    eccs = np.zeros(k, np.int32)
+    iters = 0
+    converged = True
+    decisions: list = []
+    for i, s in enumerate(sources):
+        r = bfs(
+            csr,
+            int(s),
+            executor=executor,
+            method=method,
+            mesh=mesh,
+            axis_name=axis_name,
+            max_iters=max_iters,
+            with_parents=False,
+        )
+        dist = np.asarray(r.dist)
+        finite = dist[dist != _INF]
+        eccs[i] = int(finite.max(initial=0))
+        iters = max(iters, r.levels)
+        converged = converged and r.converged
+        decisions.extend(r.decisions)
+    return RadiiResult(
+        jnp.asarray(eccs),
+        jnp.int32(iters),
+        jnp.asarray(converged),
+        tuple(decisions),
+    )

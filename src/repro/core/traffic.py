@@ -415,6 +415,64 @@ def preproc_stage_bytes(
     raise ValueError(f"unknown preprocess stage: {stage!r}")
 
 
+# --- Frontier traversal counters (DESIGN.md §11) ---------------------------
+#
+# A traversal level moves: the frontier's CSR slice (the expansion
+# gather), one (idx, val) reduce stream of the expanded tuples (fused:
+# one sweep; two-phase: three), and a dense distance/degree update
+# (read + write). Summed over levels the stream term totals the edge
+# count once per relaxation — the per-level resolution is the point:
+# short frontiers are latency-, not bandwidth-bound, which is why the
+# executor's per-level decisions (sort at small buckets) matter.
+
+
+def traversal_level_bytes(
+    frontier_edges: int,
+    num_indices: int,
+    method: str = "fused",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+) -> float:
+    """Sequential bytes of ONE frontier level at the given reduce
+    method (``fused`` = single sweep, anything else = the two-phase
+    stream, ``unbinned`` = one stream read plus the dense update). A
+    level that expanded nothing ran no reduce and no update: 0 bytes."""
+    if frontier_edges == 0:
+        return 0.0
+    tuple_bytes = index_bytes + value_bytes
+    if method == "fused":
+        red = fused_stream_bytes(
+            frontier_edges, num_indices, tuple_bytes, value_bytes
+        )
+    elif method == "unbinned":
+        red = float(frontier_edges) * tuple_bytes + num_indices * value_bytes
+    else:
+        red = pb_two_phase_stream_bytes(
+            frontier_edges, num_indices, tuple_bytes, value_bytes
+        )
+    gather = float(frontier_edges) * index_bytes  # CSR neighbor slice
+    update = 2.0 * num_indices * value_bytes  # dist compare + rewrite
+    return gather + red + update
+
+
+def traversal_bytes(
+    level_edges,
+    num_indices: int,
+    method: str = "fused",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+) -> float:
+    """Modeled sequential bytes of one whole traversal: the sum of its
+    per-level counters. ``level_edges`` is the per-level expanded tuple
+    count a ``TraversalResult.level_edges`` reports."""
+    return sum(
+        traversal_level_bytes(
+            int(e), num_indices, method, index_bytes, value_bytes
+        )
+        for e in level_edges
+    )
+
+
 def pb_seconds(
     num_tuples: int, num_indices: int, bin_range: int, hw: HardwareModel
 ) -> float:

@@ -1,0 +1,414 @@
+"""Frontier-driven traversal kernels on the PB executor (DESIGN.md §11).
+
+Every workload the repo served before this module was a whole-stream
+reduction: the stream length is the edge count and never changes. The
+traversal family — level-synchronous BFS, SSSP relaxation rounds, k-core
+peeling — is the opposite regime: each iteration expands only the
+*frontier*'s out-edges, so the stream length swings from a handful of
+tuples to the whole edge array and back within one run. That is exactly
+where cache-aware blocking is hardest ("Making Caches Work for Graph
+Analytics"; GraphCage's bin-aware frontier scheduling), and it is served
+here with three ingredients:
+
+  expansion — ``_expand_frontier`` gathers the CSR out-edges of the
+      current frontier into a **fixed-size** stream: the frontier and
+      the edge stream are padded to power-of-two buckets
+      (``bucket_len``), so jit caches are keyed on O(log m) shapes
+      instead of retracing per frontier size. Padding slots carry an
+      IN-RANGE index and the reduce op's identity value, which makes
+      them a no-op for every executor method (the clamp trick
+      ``distributed_pb.clamp_for_local_reduce`` established — an
+      out-of-range bin id is undefined input for counting binning).
+
+  reduction — each level's relaxation is ONE commutative reduce stream
+      through ``PBExecutor.reduce_stream`` (or ``shard_reduce_stream``
+      over a mesh): ``min`` for BFS levels and SSSP distances, ``max``
+      for deterministic BFS parent selection, ``add`` for k-core degree
+      decrements. The executor decides the method per level at the
+      bucketed shape (its reduce cache keys bucket ``stream_len``), so a
+      short frontier never replays a full-stream decision.
+
+  peeling/driver — the level loop is host-side (frontier sizes are
+      data-dependent), synchronizing once per level to compact the next
+      frontier. ``method="unbinned"`` bypasses the executor with a raw
+      dense scatter — the ``segment_min``-style baseline
+      ``benchmarks/fig8_traversal.py`` reports speedups against.
+
+``radii.py`` (the paper's Fig. 2b downstream kernel) is rebuilt on this
+BFS, so reordering's downstream payoff is itself measured on a PB
+workload. Traffic/roofline counterparts: ``traffic.traversal_bytes``,
+``roofline.TraversalRoofline``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import PBExecutor, get_default_executor
+from repro.core.graph import CSR
+
+_INT_MAX = np.iinfo(np.int32).max
+_F32_MAX = float(np.finfo(np.float32).max)
+
+# Methods the per-level reduction accepts: the executor's reduce set
+# plus the unbinned dense-scatter baseline.
+TRAVERSAL_METHODS = (
+    "auto", "sort", "counting", "pallas", "hierarchical", "fused", "unbinned",
+)
+
+
+def bucket_len(n: int, minimum: int = 256) -> int:
+    """Next power-of-two at least ``minimum``: the static stream length a
+    frontier of ``n`` tuples is padded to. Bounds distinct jit shapes per
+    run at O(log m) while wasting < 2x work on the padded tail."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_edges",))
+def _expand_frontier(offsets, neighs, ids, count, bucket_edges):
+    """Gather the out-edges of ``ids[:count]`` into fixed-size arrays.
+
+    Returns ``(nbr, src, pos, ok)``, each of length ``bucket_edges``:
+    destination vertex, owning frontier vertex, the edge's slot in the
+    CSR neighbor array (for weight gathers), and the validity mask.
+    Invalid slots hold clamped in-range values — callers mask them with
+    ``ok`` (values to the op identity), never by index.
+    """
+    nf = ids.shape[0]
+    valid = jnp.arange(nf, dtype=jnp.int32) < count
+    ids_c = jnp.where(valid, ids, 0)
+    deg = jnp.where(valid, offsets[ids_c + 1] - offsets[ids_c], 0)
+    cum = jnp.cumsum(deg, dtype=jnp.int32)  # inclusive prefix
+    total = cum[-1]
+    j = jnp.arange(bucket_edges, dtype=jnp.int32)
+    seg = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    seg = jnp.minimum(seg, nf - 1)
+    start = cum[seg] - deg[seg]  # exclusive prefix of the owning vertex
+    v = ids_c[seg]
+    pos = jnp.clip(offsets[v] + (j - start), 0, neighs.shape[0] - 1)
+    ok = j < total
+    return neighs[pos], v, pos, ok
+
+
+class TraversalResult(NamedTuple):
+    """One frontier traversal: distances/labels + how it ran."""
+
+    dist: jnp.ndarray  # (n,) levels (BFS, int32) or distances (SSSP, f32)
+    parent: Optional[jnp.ndarray]  # (n,) BFS tree parent (-1 = unreached)
+    levels: int  # expansion rounds executed
+    converged: bool  # frontier drained before max_iters
+    frontier_sizes: Tuple[int, ...]  # vertices per level, level 0 first
+    level_edges: Tuple[int, ...]  # real (unpadded) tuples expanded per level
+    decisions: Tuple[dict, ...]  # executor decisions, annotated with "level"
+
+
+class KCoreResult(NamedTuple):
+    """k-core peeling: surviving vertices + peel trajectory."""
+
+    in_core: jnp.ndarray  # (n,) bool — member of the k-core
+    rounds: int
+    converged: bool
+    removed_per_round: Tuple[int, ...]
+    decisions: Tuple[dict, ...]
+
+
+class _LevelReducer:
+    """Routes one level's (idx, val) stream to the chosen reduction path
+    and collects the executor's decisions, tagged with the level."""
+
+    def __init__(self, ex: PBExecutor, method, mesh, axis_name):
+        self.ex = ex
+        self.method = None if method in (None, "auto") else method
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.decisions: list = []
+        self._level = 0
+
+    def set_level(self, level: int) -> None:
+        self._level = level
+
+    def __call__(self, idx, val, *, out_size: int, op: str):
+        if self.method == "unbinned":
+            # the segment_min-style baseline: one raw dense scatter, no
+            # binning — what fig8 measures PB speedups against. The
+            # reference scatter-reduce IS that semantics; one definition
+            # keeps the baseline and the test oracle from diverging.
+            from repro.kernels.ref import scatter_reduce_ref
+
+            return scatter_reduce_ref(idx, val, out_size, op=op)
+        sink: list = []
+        self.ex.add_decision_sink(sink)
+        try:
+            if self.mesh is not None:
+                out = self.ex.shard_reduce_stream(
+                    idx, val, out_size=out_size, mesh=self.mesh, op=op,
+                    axis_name=self.axis_name, method=self.method,
+                )
+            else:
+                out = self.ex.reduce_stream(
+                    idx, val, out_size=out_size, op=op, method=self.method
+                )
+        finally:
+            self.ex.remove_decision_sink(sink)
+        for e in sink:
+            self.decisions.append({**e, "level": self._level})
+        return out
+
+
+def _resolve(method: str):
+    if method not in TRAVERSAL_METHODS:
+        raise ValueError(
+            f"unknown traversal method: {method!r} "
+            f"(want one of {TRAVERSAL_METHODS})"
+        )
+
+
+def _pad_frontier(frontier: np.ndarray) -> Tuple[jnp.ndarray, int]:
+    bf = bucket_len(frontier.size)
+    ids = np.zeros(bf, np.int32)
+    ids[: frontier.size] = frontier
+    return jnp.asarray(ids), frontier.size
+
+
+def bfs(
+    csr: CSR,
+    source: int,
+    *,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+    mesh=None,
+    axis_name: Optional[str] = None,
+    max_iters: Optional[int] = None,
+    with_parents: bool = True,
+) -> TraversalResult:
+    """Level-synchronous BFS: each level is one ``op="min"`` reduce of
+    (neighbor, level+1) tuples over the frontier's out-edges, plus — when
+    ``with_parents`` — one ``op="max"`` reduce of (neighbor, frontier
+    vertex) tuples that picks a deterministic BFS-tree parent (the
+    largest-id predecessor), method-independently.
+
+    ``dist[v]`` is the BFS level (``INT32_MAX`` when unreached). A mesh
+    routes every per-level reduction through ``shard_reduce_stream``.
+    """
+    _resolve(method)
+    ex = executor or get_default_executor()
+    n = csr.num_nodes
+    if not 0 <= source < n:
+        raise ValueError(f"source {source} outside [0, {n})")
+    max_iters = n if max_iters is None else max_iters
+    offs_host = np.asarray(csr.offsets)
+    red = _LevelReducer(ex, method, mesh, axis_name)
+
+    dist = jnp.full((n,), _INT_MAX, jnp.int32).at[source].set(0)
+    parent = (
+        jnp.full((n,), -1, jnp.int32).at[source].set(source)
+        if with_parents
+        else None
+    )
+    frontier = np.asarray([source], np.int32)
+    sizes = [1]
+    edges = []
+    level = 0
+    while frontier.size and level < max_iters:
+        red.set_level(level)
+        total = int((offs_host[frontier + 1] - offs_host[frontier]).sum())
+        edges.append(total)
+        if total == 0:
+            # the frontier has no out-edges: the round ran (levels and
+            # radii's iters count it, matching the pre-§11 dense BFS)
+            # but expanded nothing — 0 in level_edges, trailing 0 in
+            # frontier_sizes, no reduce
+            level += 1
+            frontier = np.zeros(0, np.int32)
+            sizes.append(0)
+            break
+        ids, count = _pad_frontier(frontier)
+        be = bucket_len(total)
+        nbr, srcv, _, ok = _expand_frontier(
+            csr.offsets, csr.neighs, ids, count, be
+        )
+        val = jnp.where(ok, jnp.int32(level + 1), jnp.int32(_INT_MAX))
+        cand = red(nbr, val, out_size=n, op="min")
+        newly = cand < dist
+        if with_parents:
+            pval = jnp.where(ok, srcv, jnp.int32(np.iinfo(np.int32).min))
+            pmax = red(nbr, pval, out_size=n, op="max")
+            parent = jnp.where(newly, pmax, parent)
+        dist = jnp.where(newly, cand, dist)
+        frontier = np.flatnonzero(np.asarray(newly)).astype(np.int32)
+        sizes.append(int(frontier.size))
+        level += 1
+    return TraversalResult(
+        dist=dist,
+        parent=parent,
+        levels=level,
+        converged=frontier.size == 0,
+        frontier_sizes=tuple(sizes),
+        level_edges=tuple(edges),
+        decisions=tuple(red.decisions),
+    )
+
+
+def sssp(
+    csr: CSR,
+    weights: jnp.ndarray,
+    source: int,
+    *,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+    mesh=None,
+    axis_name: Optional[str] = None,
+    max_iters: Optional[int] = None,
+) -> TraversalResult:
+    """Frontier-driven SSSP (delta-stepping-style rounds): each round
+    relaxes the out-edges of every vertex whose distance improved last
+    round — one ``op="min"`` reduce of (neighbor, dist[u] + w(u,v))
+    tuples. With non-negative weights this converges in at most n rounds
+    (Bellman-Ford bound); the frontier restriction makes the common case
+    far cheaper, exactly like BFS.
+
+    ``weights`` is aligned with ``csr.neighs`` (one weight per CSR edge
+    slot). ``dist`` is float32 with ``float32 max`` at unreached
+    vertices (not ``inf``: the executor's min identity).
+    """
+    _resolve(method)
+    ex = executor or get_default_executor()
+    n = csr.num_nodes
+    if not 0 <= source < n:
+        raise ValueError(f"source {source} outside [0, {n})")
+    if weights.shape[0] != csr.num_edges:
+        raise ValueError(
+            f"weights must align with csr.neighs: {weights.shape[0]} != "
+            f"{csr.num_edges}"
+        )
+    w = weights.astype(jnp.float32)
+    max_iters = n if max_iters is None else max_iters
+    offs_host = np.asarray(csr.offsets)
+    red = _LevelReducer(ex, method, mesh, axis_name)
+
+    dist = jnp.full((n,), _F32_MAX, jnp.float32).at[source].set(0.0)
+    frontier = np.asarray([source], np.int32)
+    sizes = [1]
+    edges = []
+    rounds = 0
+    while frontier.size and rounds < max_iters:
+        red.set_level(rounds)
+        total = int((offs_host[frontier + 1] - offs_host[frontier]).sum())
+        edges.append(total)
+        if total == 0:  # same trace semantics as the bfs zero-edge exit
+            rounds += 1
+            frontier = np.zeros(0, np.int32)
+            sizes.append(0)
+            break
+        ids, count = _pad_frontier(frontier)
+        be = bucket_len(total)
+        nbr, srcv, pos, ok = _expand_frontier(
+            csr.offsets, csr.neighs, ids, count, be
+        )
+        val = jnp.where(ok, dist[srcv] + w[pos], jnp.float32(_F32_MAX))
+        cand = red(nbr, val, out_size=n, op="min")
+        improved = cand < dist
+        dist = jnp.where(improved, cand, dist)
+        frontier = np.flatnonzero(np.asarray(improved)).astype(np.int32)
+        sizes.append(int(frontier.size))
+        rounds += 1
+    return TraversalResult(
+        dist=dist,
+        parent=None,
+        levels=rounds,
+        converged=frontier.size == 0,
+        frontier_sizes=tuple(sizes),
+        level_edges=tuple(edges),
+        decisions=tuple(red.decisions),
+    )
+
+
+def k_core(
+    csr: CSR,
+    k: int,
+    *,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+    mesh=None,
+    axis_name: Optional[str] = None,
+    max_iters: Optional[int] = None,
+) -> KCoreResult:
+    """k-core peeling: iteratively remove vertices of degree < k; each
+    peel round streams the removed vertices' out-edges through one
+    ``op="add"`` reduce of (neighbor, 1) tuples — the degree decrement.
+
+    Degree here is the CSR out-degree and removal deletes the removed
+    vertex's out-edges (on a symmetrized graph this is the textbook
+    k-core; on a directed CSR it is the out-degree core). Decrements
+    onto already-removed neighbors are harmless — their membership is
+    final.
+    """
+    _resolve(method)
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    ex = executor or get_default_executor()
+    n = csr.num_nodes
+    max_iters = n if max_iters is None else max_iters
+    offs_host = np.asarray(csr.offsets)
+    red = _LevelReducer(ex, method, mesh, axis_name)
+
+    deg = (csr.offsets[1:] - csr.offsets[:-1]).astype(jnp.int32)
+    alive = jnp.ones((n,), jnp.bool_)
+    frontier = np.flatnonzero(np.asarray(deg) < k).astype(np.int32)
+    removed = [int(frontier.size)] if frontier.size else []
+    rounds = 0
+    while frontier.size and rounds < max_iters:
+        red.set_level(rounds)
+        alive = alive.at[jnp.asarray(frontier)].set(False)
+        total = int((offs_host[frontier + 1] - offs_host[frontier]).sum())
+        if total:
+            ids, count = _pad_frontier(frontier)
+            be = bucket_len(total)
+            nbr, _, _, ok = _expand_frontier(
+                csr.offsets, csr.neighs, ids, count, be
+            )
+            dec = red(
+                nbr, jnp.where(ok, 1, 0).astype(jnp.int32), out_size=n, op="add"
+            )
+            deg = deg - dec
+        frontier = np.flatnonzero(
+            np.asarray(alive) & (np.asarray(deg) < k)
+        ).astype(np.int32)
+        if frontier.size:
+            removed.append(int(frontier.size))
+        rounds += 1
+    return KCoreResult(
+        in_core=alive,
+        rounds=rounds,
+        converged=frontier.size == 0,
+        removed_per_round=tuple(removed),
+        decisions=tuple(red.decisions),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Oracles (numpy, tests/benchmarks only).
+# ---------------------------------------------------------------------------
+
+
+def k_core_oracle(csr: CSR, k: int) -> np.ndarray:
+    """Sequential peeling with the same semantics as ``k_core``."""
+    off, nei = np.asarray(csr.offsets), np.asarray(csr.neighs)
+    n = csr.num_nodes
+    deg = np.diff(off).astype(np.int64)
+    alive = np.ones(n, bool)
+    frontier = np.flatnonzero(deg < k)
+    while frontier.size:
+        alive[frontier] = False
+        for u in frontier:
+            for v in nei[off[u] : off[u + 1]]:
+                deg[v] -= 1
+        frontier = np.flatnonzero(alive & (deg < k))
+    return alive

@@ -3,7 +3,7 @@
 The two-phase pipeline (``kernels/binning.py`` + a Bin-Read scatter) pays
 two full HBM sweeps of the edge stream: Binning writes the reordered
 ``(idx, val)`` tuples out, Bin-Read reads them back. For **commutative**
-reductions (add, min) the binned stream never needs to exist: the
+reductions (add, min, max) the binned stream never needs to exist: the
 paper's C-Buffers can absorb the irregularity on chip and a buffer flush
 can *reduce* its tuples into a dense per-bin accumulator tile instead of
 appending them to an HBM bin. That is what ``cobra_bin_accumulate``
@@ -44,7 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 # single shared definition of the op set and identities (core/pb.py)
 from repro.core.pb import reduce_identity  # noqa: E402
 
-_FUSED_OPS = ("add", "min")
+_FUSED_OPS = ("add", "min", "max")
 
 
 def _fused_kernel(
@@ -84,9 +84,12 @@ def _fused_kernel(
         if op == "add":
             contrib = jnp.sum(jnp.where(hit, vals, 0), axis=0)
             acc_ref[b, :] = acc_ref[b, :] + contrib.astype(acc_ref.dtype)
-        else:  # min
+        elif op == "min":
             contrib = jnp.min(jnp.where(hit, vals, ident), axis=0)
             acc_ref[b, :] = jnp.minimum(acc_ref[b, :], contrib.astype(acc_ref.dtype))
+        else:  # max
+            contrib = jnp.max(jnp.where(hit, vals, ident), axis=0)
+            acc_ref[b, :] = jnp.maximum(acc_ref[b, :], contrib.astype(acc_ref.dtype))
         len_ref[b] = 0
 
     @pl.when(step < nblocks)
@@ -150,7 +153,7 @@ def cobra_bin_accumulate_pallas(
     """Fused bin-and-accumulate in ONE sweep of the (idx, val) stream.
 
     Returns the dense ``(num_indices,)`` reduction (``op`` in
-    {"add", "min"}) with ``reduce_identity(op, val.dtype)`` at untouched
+    {"add", "min", "max"}) with ``reduce_identity(op, val.dtype)`` at untouched
     indices. Equivalent to ``kernels/ref.py::scatter_reduce_ref`` but the
     reordered tuple stream is never materialized in HBM: C-Buffer
     flushes reduce directly into the VMEM-resident accumulator.

@@ -51,7 +51,9 @@ def scatter_reduce_ref(idx, val, num_indices, op="add"):
     out = jnp.full(
         (num_indices,) + val.shape[1:], reduce_identity(op, val.dtype), val.dtype
     )
-    return out.at[idx].add(val) if op == "add" else out.at[idx].min(val)
+    if op == "add":
+        return out.at[idx].add(val)
+    return out.at[idx].min(val) if op == "min" else out.at[idx].max(val)
 
 
 def scatter_rows_ref(x, pos, out_rows):

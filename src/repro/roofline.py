@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1,
@@ -295,6 +295,70 @@ class ShardedPBStreamRoofline:
             self.value_bytes, self.hbm_bw,
         ).t_fused
         return single / max(self.t_step, 1e-30)
+
+
+@dataclass(frozen=True)
+class TraversalRoofline:
+    """HBM-roofline view of one frontier traversal (DESIGN.md §11).
+
+    ``level_edges`` is the per-level expanded tuple count
+    (``TraversalResult.level_edges``). Per level the executor's choice
+    moves either the fused single sweep or the two-phase stream
+    (``traffic.traversal_level_bytes``); against the unbinned dense
+    scatter the byte ratio is the bandwidth-bound ceiling on the PB
+    speedup fig8 measures. Short levels are latency-bound — the bytes
+    model says they are ~free, which is exactly why the per-level
+    decision (sort at small buckets) and not one whole-run method is the
+    right policy.
+    """
+
+    level_edges: Tuple[int, ...]
+    num_indices: int
+    value_bytes: int = 4
+    hbm_bw: float = 819e9
+
+    def _bytes(self, method: str) -> float:
+        from repro.core.traffic import traversal_bytes
+
+        return traversal_bytes(
+            self.level_edges,
+            self.num_indices,
+            method,
+            value_bytes=self.value_bytes,
+        )
+
+    @property
+    def fused_bytes(self) -> float:
+        return self._bytes("fused")
+
+    @property
+    def two_phase_bytes(self) -> float:
+        return self._bytes("sort")
+
+    @property
+    def unbinned_bytes(self) -> float:
+        return self._bytes("unbinned")
+
+    @property
+    def t_fused(self) -> float:
+        return self.fused_bytes / self.hbm_bw
+
+    @property
+    def t_two_phase(self) -> float:
+        return self.two_phase_bytes / self.hbm_bw
+
+    @property
+    def speedup_ceiling(self) -> float:
+        """Bandwidth-bound ceiling of fused over two-phase execution."""
+        return self.two_phase_bytes / max(self.fused_bytes, 1e-30)
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.level_edges)
+
+    @property
+    def total_edges(self) -> int:
+        return int(sum(self.level_edges))
 
 
 @dataclass(frozen=True)

@@ -181,8 +181,10 @@ def test_autotune_cache_roundtrip(tmp_path):
     ex = PBExecutor(autotune=True, cache_dir=d)
     dec = ex.decide(4096, 20000)
     assert dec.source == "autotuned" and dec.method in METHODS
+    from repro.core.executor import _CACHE_SCHEMA_VERSION
+
     blob = json.loads(open(os.path.join(d, "autotune.json")).read())
-    assert blob["version"] == 1 and len(blob["entries"]) == 1
+    assert blob["version"] == _CACHE_SCHEMA_VERSION and len(blob["entries"]) == 1
     ex2 = PBExecutor(autotune=True, cache_dir=d)
     dec2 = ex2.decide(4096, 20000)
     assert dec2.source == "cache" and dec2.method == dec.method
@@ -202,6 +204,108 @@ def test_autotune_unwritable_cache_dir_degrades(tmp_path):
     # and the binning itself still runs end to end
     idx, val = _random_stream(4096, 2000, seed=23)
     _check_method(ex, idx, val, 4096, 256, dec.method)
+
+
+def test_autotune_cache_merges_concurrent_writers(tmp_path):
+    """Satellite fix: _save used to read-once/overwrite-forever, so two
+    processes clobbered each other's measured entries. Merge-on-save
+    keeps both writers' keys — modeled here with two cache instances
+    (separate in-memory views, one shared file: exactly the two-process
+    interleave) and below with two real OS processes."""
+    from repro.core.executor import _AutotuneCache
+
+    d = str(tmp_path / "cache")
+    c1 = _AutotuneCache(d)
+    c2 = _AutotuneCache(d)  # loaded before c1 wrote anything
+    c1.put("key_a", {"method": "sort"})
+    c2.put("key_b", {"method": "counting"})  # must not drop key_a
+    c1.put("key_c", {"method": "fused"})  # must not drop key_b
+    fresh = _AutotuneCache(d)
+    assert set(fresh.mem) == {"key_a", "key_b", "key_c"}
+    assert fresh.mem["key_b"] == {"method": "counting"}
+
+
+def test_autotune_cache_two_process_interleave(tmp_path):
+    """The same property with two concurrent OS processes, each writing
+    its own disjoint key set entry by entry: no lost entries."""
+    import subprocess
+    import sys
+
+    d = str(tmp_path / "cache")
+    code = (
+        "import sys\n"
+        "from repro.core.executor import _AutotuneCache\n"
+        "tag, n = sys.argv[1], int(sys.argv[2])\n"
+        "c = _AutotuneCache(sys.argv[3])\n"
+        "for i in range(n):\n"
+        "    c.put(f'{tag}_{i}', {'method': 'sort', 'i': i})\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    n = 20
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", code, tag, str(n), d],
+            env=env, stderr=subprocess.PIPE,
+        )
+        for tag in ("p1", "p2")
+    ]
+    for p in procs:
+        assert p.wait(timeout=300) == 0, p.stderr.read().decode()[-2000:]
+    from repro.core.executor import _AutotuneCache
+
+    merged = _AutotuneCache(d).mem
+    want = {f"{t}_{i}" for t in ("p1", "p2") for i in range(n)}
+    missing = want - set(merged)
+    assert not missing, f"lost {len(missing)} entries: {sorted(missing)[:6]}"
+
+
+def test_bin_streams_reports_real_flatness_and_clamp():
+    """Satellite fix: the batched path passes the true per-stream value
+    flatness to decide, and a clamped decision is logged under its own
+    source instead of silently relabeling the original."""
+    ex = PBExecutor()
+    rng = np.random.default_rng(31)
+    B, m, n = 3, 6000, 1 << 15
+    idx = jnp.asarray(rng.integers(0, n, (B, m)), jnp.int32)
+    rows_val = jnp.asarray(rng.normal(size=(B, m, 4)), jnp.float32)
+    bb = ex.bin_streams(idx, rows_val, num_indices=n)
+    assert bb.val.shape[:2] == (B, m)
+    # row values are not flat: the logged decision must say so via a
+    # method legal for non-flat values, and any clamp must be visible
+    assert ex.decision_log, "decide must have logged"
+    last = ex.decision_log[-1]
+    assert last["method"] in ("sort", "counting")
+    if last["source"].endswith("+batch-clamp"):
+        # the clamp entry follows the original decision entry
+        orig = ex.decision_log[-2]
+        assert orig["method"] not in ("sort", "counting")
+    # flat batched values still round-trip
+    flat_val = jnp.asarray(rng.normal(size=(B, m)), jnp.float32)
+    bb2 = ex.bin_streams(idx, flat_val, num_indices=n)
+    assert bb2.val.shape == (B, m)
+
+
+def test_bin_streams_clamp_is_logged():
+    """Force a shape whose decision is hierarchical: the batched path
+    must clamp to a vmap-able method AND log the clamp."""
+    ex = PBExecutor()
+    n, m, B = 1 << 22, 1 << 16, 2  # narrow range: 65536 bins -> hierarchical
+    assert ex.decide(n, m, bin_range=64).method == "hierarchical"
+    rng = np.random.default_rng(37)
+    idx = jnp.asarray(rng.integers(0, n, (B, m)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(B, m)), jnp.float32)
+    before = len(ex.decision_log)
+    bb = ex.bin_streams(idx, val, num_indices=n, bin_range=64)
+    assert bb.idx.shape == (B, m)
+    new = ex.decision_log[before:]
+    # the pre-clamp decision entry AND the clamp entry are both present
+    assert any(e["method"] == "hierarchical" for e in new)
+    clamped = [e for e in new if e["source"].endswith("+batch-clamp")]
+    assert clamped, "the clamp must be logged, not silently relabeled"
+    assert all(e["method"] in ("sort", "counting") for e in clamped)
 
 
 def test_rewired_consumers_share_executor():

@@ -194,6 +194,47 @@ def test_bin_read_sorted_within_hint():
     _assert_reduce(out1, idx, val, 64)
 
 
+def test_bin_read_pytree_values():
+    """Satellite fix: Bin-Read used to crash on pytree values
+    (``bins.val.shape`` on a tuple) even though binning accepts pytrees.
+    Both binning methods' pytree outputs now reduce leafwise, matching
+    the per-leaf single-array result exactly."""
+    idx, val_f = _random_stream(100, 800, seed=21)
+    val_i = jnp.arange(800, dtype=jnp.int32)
+    for binner in (pb_core.binning_sort, pb_core.binning_counting):
+        bins = binner(idx, {"a": val_f, "b": (val_i,)}, 16, 7)
+        out = pb_core.bin_read_reduce(bins, 100, op="add")
+        assert set(out) == {"a", "b"}
+        single = binner(idx, val_f, 16, 7)
+        np.testing.assert_allclose(
+            np.asarray(out["a"]),
+            np.asarray(pb_core.bin_read_reduce(single, 100, op="add")),
+            atol=1e-5,
+        )
+        want_b = ref.scatter_reduce_ref(idx, val_i, 100, op="add")
+        np.testing.assert_array_equal(np.asarray(out["b"][0]), np.asarray(want_b))
+    # the single-array path is unchanged (min + scatter_add alias)
+    bins = pb_core.binning_sort(idx, val_i, 16, 7)
+    got_min = pb_core.bin_read_reduce(bins, 100, op="min")
+    np.testing.assert_array_equal(
+        np.asarray(got_min), np.asarray(ref.scatter_reduce_ref(idx, val_i, 100, op="min"))
+    )
+
+
+def test_max_reduce_identity_and_methods():
+    """op="max" end to end: identity at untouched indices, every reduce
+    method equal to the dense oracle."""
+    assert int(reduce_identity("max", jnp.int32)) == np.iinfo(np.int32).min
+    idx, val = _random_stream(300, 4000, seed=25, dtype=jnp.int32)
+    ex = PBExecutor()
+    want = ref.scatter_reduce_ref(idx, val, 300, op="max")
+    for method in REDUCE_METHODS:
+        got = ex.reduce_stream(idx, val, out_size=300, op="max", method=method)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=method
+        )
+
+
 # -- consumers -------------------------------------------------------------
 
 

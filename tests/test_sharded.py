@@ -174,10 +174,12 @@ def test_single_device_fallbacks():
         get_default_executor().shard_reduce_stream(idx, val, out_size=100, mesh=None)
     )
     np.testing.assert_allclose(got2, want, rtol=1e-6)
+    # op="max" joined REDUCE_OPS (traversal parent selection); a truly
+    # order-sensitive op is still rejected on every entry point
     with pytest.raises(ValueError, match="commutative"):
-        shard_reduce_stream(idx, val, out_size=100, op="max")
+        shard_reduce_stream(idx, val, out_size=100, op="concat")
     with pytest.raises(ValueError, match="commutative"):
-        get_default_executor().shard_reduce_stream(idx, val, out_size=100, op="max")
+        get_default_executor().shard_reduce_stream(idx, val, out_size=100, op="concat")
 
 
 def test_empty_stream_identity():

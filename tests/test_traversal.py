@@ -1,0 +1,360 @@
+"""Frontier traversal on the PB executor (core/traversal.py, DESIGN.md §11).
+
+BFS / SSSP / k-core against SciPy (and numpy) oracles across the 5-graph
+smoke suite under every reduce method, the op="max" fused/two-phase
+parity property, the frontier bucketing policy, and the 8-device sharded
+runs (subprocess isolation, like test_sharded.py). The bench-scale
+oracle runs are marked ``slow`` and excluded from tier-1.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.sparse import csr_matrix
+from scipy.sparse.csgraph import dijkstra, shortest_path
+
+from repro.core import (
+    COO,
+    PBExecutor,
+    bfs,
+    build_csr,
+    graph_suite,
+    k_core,
+    k_core_oracle,
+    sssp,
+)
+from repro.core.radii import radii
+from repro.core.traversal import bucket_len
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+METHODS = ("auto", "sort", "counting", "hierarchical", "fused")
+_INT_MAX = np.iinfo(np.int32).max
+_F32_MAX = np.float32(np.finfo(np.float32).max)
+
+
+def _scipy_graph(csr, weights=None):
+    off, nei = np.asarray(csr.offsets), np.asarray(csr.neighs)
+    data = np.ones(len(nei)) if weights is None else np.asarray(weights, np.float64)
+    return csr_matrix((data, nei, off), shape=(csr.num_nodes, csr.num_nodes))
+
+
+def _bfs_oracle(csr, source):
+    d = shortest_path(_scipy_graph(csr), method="D", unweighted=True, indices=source)
+    out = np.full(csr.num_nodes, _INT_MAX, np.int64)
+    out[np.isfinite(d)] = d[np.isfinite(d)].astype(np.int64)
+    return out
+
+
+def _source_for(csr) -> int:
+    """Max-out-degree vertex: guaranteed non-trivial expansion."""
+    return int(np.argmax(np.diff(np.asarray(csr.offsets))))
+
+
+def _dedup(coo: COO) -> COO:
+    """Unique (src, dst) pairs — scipy's shortest_path sums duplicate
+    entries (corrupting parallel-edge weights), our min-relaxation takes
+    the min; testing on the deduplicated graph removes the ambiguity."""
+    e = np.unique(
+        np.stack([np.asarray(coo.src), np.asarray(coo.dst)], 1), axis=0
+    )
+    return COO(jnp.asarray(e[:, 0]), jnp.asarray(e[:, 1]), coo.num_nodes)
+
+
+# -- BFS --------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_bfs_matches_scipy_all_graphs(method):
+    """Acceptance: BFS levels == scipy shortest_path(unweighted) on all 5
+    smoke graphs under every reduce method."""
+    for name, g in graph_suite("smoke").items():
+        csr = build_csr(g, method="auto")
+        s = _source_for(csr)
+        r = bfs(csr, s, method=method, with_parents=False)
+        want = _bfs_oracle(csr, s)
+        assert r.converged, name
+        np.testing.assert_array_equal(np.asarray(r.dist), want, err_msg=f"{name}/{method}")
+
+
+def test_bfs_parents_form_valid_tree():
+    """Every reached non-source vertex's parent is a true predecessor:
+    dist[parent] == dist[v]-1 and (parent -> v) is a CSR edge. The max
+    reduction makes the choice deterministic (largest-id predecessor)."""
+    g = graph_suite("smoke")["URND"]
+    csr = build_csr(g, method="auto")
+    s = _source_for(csr)
+    r = bfs(csr, s, method="auto", with_parents=True)
+    off, nei = np.asarray(csr.offsets), np.asarray(csr.neighs)
+    d, par = np.asarray(r.dist), np.asarray(r.parent)
+    reached = (d != _INT_MAX) & (d > 0)
+    assert reached.any()
+    for v in np.flatnonzero(reached):
+        p = par[v]
+        assert d[p] == d[v] - 1, (v, p)
+        assert v in nei[off[p] : off[p + 1]], (v, p)
+    # unreached vertices keep the -1 sentinel
+    assert np.all(par[d == _INT_MAX] == -1)
+
+
+def test_bfs_unbinned_baseline_agrees():
+    g = graph_suite("smoke")["EURO"]
+    csr = build_csr(g, method="auto")
+    s = _source_for(csr)
+    a = bfs(csr, s, method="auto")
+    b = bfs(csr, s, method="unbinned")
+    np.testing.assert_array_equal(np.asarray(a.dist), np.asarray(b.dist))
+    np.testing.assert_array_equal(np.asarray(a.parent), np.asarray(b.parent))
+    assert b.decisions == ()  # the baseline never consults the executor
+
+
+def test_bfs_records_per_level_decisions():
+    g = graph_suite("smoke")["EURO"]
+    csr = build_csr(g, method="auto")
+    ex = PBExecutor()
+    r = bfs(csr, _source_for(csr), executor=ex, method="auto")
+    assert r.decisions, "auto BFS must log executor decisions"
+    assert all(d["kind"] == "reduce" for d in r.decisions)
+    levels = sorted({d["level"] for d in r.decisions})
+    assert levels[0] == 0 and levels[-1] <= r.levels - 1
+    # two reduces per expanding level: the min relax + the max parent pick
+    assert {"min", "max"} <= {d["op"] for d in r.decisions}
+
+
+def test_bfs_rejects_bad_source_and_method():
+    csr = build_csr(graph_suite("smoke")["KRON"], method="auto")
+    with pytest.raises(ValueError, match="source"):
+        bfs(csr, csr.num_nodes)
+    with pytest.raises(ValueError, match="method"):
+        bfs(csr, 0, method="quantum")
+
+
+def test_bucket_len_policy():
+    """Static-shape policy: power-of-two buckets with a floor, monotone,
+    and covering — the retrace count per run is O(log m)."""
+    assert bucket_len(0) == 256 and bucket_len(256) == 256
+    assert bucket_len(257) == 512
+    assert bucket_len(100_000) == 131072
+    for n in (1, 255, 4097, 70_000):
+        assert bucket_len(n) >= n
+
+
+def test_reduce_cache_key_buckets_stream_len():
+    """Frontier policy: reduce keys bucket stream_len (log2) so a short
+    frontier never replays a full-stream entry while same-bucket lengths
+    share one; binning keys keep the exact length."""
+    ex = PBExecutor()
+    assert ex._key(100, 5000, jnp.int32, kind="reduce") == ex._key(
+        100, 8191, jnp.int32, kind="reduce"
+    )
+    assert ex._key(100, 200, jnp.int32, kind="reduce") != ex._key(
+        100, 8000, jnp.int32, kind="reduce"
+    )
+    assert ex._key(100, 5000, jnp.int32) != ex._key(100, 8191, jnp.int32)
+
+
+# -- SSSP -------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_sssp_matches_scipy_all_graphs(method):
+    """Acceptance: SSSP distances == scipy dijkstra on all 5 smoke
+    graphs (deduplicated: see _dedup) under every reduce method."""
+    for name, g in graph_suite("smoke").items():
+        csr = build_csr(_dedup(g), method="auto")
+        s = _source_for(csr)
+        rng = np.random.default_rng(42)
+        w = (rng.random(csr.num_edges) * 10 + 0.5).astype(np.float32)
+        r = sssp(csr, jnp.asarray(w), s, method=method)
+        want = dijkstra(_scipy_graph(csr, w), indices=s)
+        got = np.asarray(r.dist).astype(np.float64)
+        got[got == _F32_MAX] = np.inf
+        assert r.converged, name
+        finite = np.isfinite(want)
+        np.testing.assert_array_equal(
+            np.isfinite(got), finite, err_msg=f"{name}/{method}"
+        )
+        np.testing.assert_allclose(
+            got[finite], want[finite], rtol=1e-5, err_msg=f"{name}/{method}"
+        )
+
+
+def test_sssp_unit_weights_equal_bfs_levels():
+    g = graph_suite("smoke")["URND"]
+    csr = build_csr(g, method="auto")
+    s = _source_for(csr)
+    r = sssp(csr, jnp.ones((csr.num_edges,), jnp.float32), s)
+    b = bfs(csr, s, with_parents=False)
+    got = np.asarray(r.dist)
+    want = np.asarray(b.dist).astype(np.float32)
+    want[want == _INT_MAX] = _F32_MAX
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sssp_rejects_misaligned_weights():
+    csr = build_csr(graph_suite("smoke")["KRON"], method="auto")
+    with pytest.raises(ValueError, match="align"):
+        sssp(csr, jnp.ones((3,), jnp.float32), 0)
+
+
+# -- k-core -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_kcore_matches_oracle_all_graphs(method):
+    """Acceptance: k-core membership == sequential peeling oracle on all
+    5 smoke graphs under every reduce method."""
+    for name, g in graph_suite("smoke").items():
+        csr = build_csr(g, method="auto")
+        kc = k_core(csr, 3, method=method)
+        assert kc.converged, name
+        np.testing.assert_array_equal(
+            np.asarray(kc.in_core), k_core_oracle(csr, 3), err_msg=f"{name}/{method}"
+        )
+
+
+def test_kcore_degenerate_ks():
+    csr = build_csr(graph_suite("smoke")["EURO"], method="auto")
+    assert bool(np.all(np.asarray(k_core(csr, 0).in_core)))  # k=0 keeps all
+    big = k_core(csr, csr.num_edges + 1)  # nothing can survive
+    assert not np.asarray(big.in_core).any()
+    with pytest.raises(ValueError, match=">= 0"):
+        k_core(csr, -1)
+
+
+# -- radii on the new BFS ---------------------------------------------------
+
+
+def test_radii_methods_agree():
+    """radii is now a PB workload: every executor method produces the
+    identical eccentricities, and decisions surface in the result."""
+    g = graph_suite("smoke")["HBUBL"]
+    csr = build_csr(g, method="auto")
+    base = radii(csr, k=4, max_iters=300, seed=0)
+    assert bool(base.converged)
+    assert base.decisions  # per-level executor decisions recorded
+    for method in ("sort", "fused", "unbinned"):
+        r = radii(csr, k=4, max_iters=300, seed=0, method=method)
+        np.testing.assert_array_equal(np.asarray(r.ecc), np.asarray(base.ecc))
+        assert int(r.iters) == int(base.iters)
+
+
+# -- op="max" parity (acceptance property test) -----------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_max_parity_fused_vs_two_phase(dtype):
+    """Acceptance: op="max" under the fused single sweep equals the
+    two-phase Bin-Read BIT-FOR-BIT on randomized streams (max never
+    rounds, so float equality is exact too)."""
+    ex = PBExecutor()
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(10, 900))
+        m = int(rng.integers(1, 6000))
+        idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+            val = jnp.asarray(rng.integers(-(1 << 30), 1 << 30, m), dtype)
+        else:
+            val = jnp.asarray(rng.standard_normal(m) * 1e6, dtype)
+        fused = ex.reduce_stream(idx, val, out_size=n, op="max", method="fused")
+        for method in ("sort", "counting", "hierarchical"):
+            two = ex.reduce_stream(idx, val, out_size=n, op="max", method=method)
+            np.testing.assert_array_equal(
+                np.asarray(fused), np.asarray(two), err_msg=f"seed={seed}/{method}"
+            )
+
+
+def test_min_max_identities_on_empty_stream():
+    ex = PBExecutor()
+    empty_i = jnp.zeros((0,), jnp.int32)
+    lo = ex.reduce_stream(empty_i, jnp.zeros((0,), jnp.int32), out_size=5, op="max")
+    hi = ex.reduce_stream(empty_i, jnp.zeros((0,), jnp.float32), out_size=5, op="min")
+    assert np.all(np.asarray(lo) == np.iinfo(np.int32).min)
+    assert np.all(np.asarray(hi) == np.finfo(np.float32).max)
+
+
+# -- 8-device sharded (acceptance) ------------------------------------------
+
+
+def run_py(body: str, devices: int = 8, timeout: int = 900):
+    code = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_traversal_sharded_8dev():
+    """Acceptance: BFS / SSSP / k-core on a forced 8-device mesh match
+    the oracles — method=auto on every smoke graph, every forced method
+    on one graph (the per-level reduce routes via shard_reduce_stream)."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (bfs, build_csr, graph_suite, k_core,
+                                k_core_oracle, make_stream_mesh, sssp)
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        suite = graph_suite("smoke")
+
+        def src_of(csr):
+            return int(np.argmax(np.diff(np.asarray(csr.offsets))))
+
+        for name, g in suite.items():
+            csr = build_csr(g, method="auto")
+            s = src_of(csr)
+            one = bfs(csr, s, with_parents=True)  # single-device reference
+            shd = bfs(csr, s, mesh=mesh, with_parents=True)
+            assert np.array_equal(np.asarray(one.dist), np.asarray(shd.dist)), name
+            assert np.array_equal(np.asarray(one.parent), np.asarray(shd.parent)), name
+            assert shd.decisions and all(
+                d.get("mesh") == {"shard": 8} for d in shd.decisions), name
+            kc = k_core(csr, 3, mesh=mesh)
+            assert np.array_equal(np.asarray(kc.in_core),
+                                  k_core_oracle(csr, 3)), name
+        print("auto x 5 graphs OK")
+
+        g = suite["KRON"]
+        csr = build_csr(g, method="auto")
+        s = src_of(csr)
+        rng = np.random.default_rng(7)
+        w = jnp.asarray((rng.random(csr.num_edges) * 5 + 0.5).astype(np.float32))
+        ref_b = bfs(csr, s, with_parents=False)
+        ref_s = sssp(csr, w, s)
+        ref_k = np.asarray(k_core_oracle(csr, 3))
+        for method in ("sort", "counting", "hierarchical", "fused"):
+            b = bfs(csr, s, mesh=mesh, method=method, with_parents=False)
+            assert np.array_equal(np.asarray(b.dist), np.asarray(ref_b.dist)), method
+            r = sssp(csr, w, s, mesh=mesh, method=method)
+            np.testing.assert_allclose(np.asarray(r.dist), np.asarray(ref_s.dist),
+                                       rtol=1e-6, err_msg=method)
+            kc = k_core(csr, 3, mesh=mesh, method=method)
+            assert np.array_equal(np.asarray(kc.in_core), ref_k), method
+        print("forced methods OK")
+    """)
+
+
+# -- large-graph oracle (slow: excluded from tier-1) ------------------------
+
+
+@pytest.mark.slow
+def test_bfs_matches_scipy_bench_graph():
+    """Bench-scale oracle (~2M-edge KRON): the same scipy equivalence at
+    a size where bucketing and cache policy actually cycle. Excluded
+    from the tier-1 budget (pytest.ini deselects `slow`)."""
+    g = graph_suite("bench")["KRON"]
+    csr = build_csr(g, method="auto")
+    s = _source_for(csr)
+    r = bfs(csr, s, method="auto", with_parents=False)
+    np.testing.assert_array_equal(np.asarray(r.dist), _bfs_oracle(csr, s))
+    kc = k_core(csr, 4, method="auto")
+    assert kc.converged
