@@ -1,0 +1,171 @@
+"""Serving load (beyond-paper): the PB stack behind the query frontend.
+
+Three row families (DESIGN.md §12, EXPERIMENTS.md serving protocol):
+
+  serving/warmup/<graph>  — startup cost of the warm-plan protocol:
+      preprocess (PreprocessPipeline) + decision enumeration + compile
+      probes, and how many autotune cache writes warmup absorbed (the
+      warm-cache invariant says serving itself causes zero).
+
+  serving/batch/bN, serving/ppr_batch/bN — micro-batch amortization:
+      measured per-query service time of ONE coalesced tick at batch N
+      next to the modeled per-query bytes (``traffic.serving_query_bytes``
+      / ``traffic.ppr_batch_bytes``). PPR is the structural win: the
+      m-length index stream is read once for the whole batch.
+
+  serving/load/<mult>x — the saturation curve: seeded open-loop Poisson
+      arrivals (``poisson_trace``) replayed against a REAL clock at 0.5x,
+      1.0x and 2.0x of the measured saturation rate; throughput and
+      p50/p99 latency, next to the M/D/1 queue model
+      (``roofline.ServingRoofline``). Below the knee latency is flat;
+      past it the backlog grows — max_batch, not kernel speed, sets the
+      knee.
+
+Row NAMES are load-level-stable (0.5x/1.0x/2.0x, not absolute rates) so
+the check_bench_rows key-set guard holds across machines.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Rows, graph_scale
+from repro.core import graph_suite
+from repro.core.traffic import ppr_batch_bytes, serving_query_bytes
+from repro.roofline import ServingRoofline
+from repro.serving.graph_frontend import (
+    GraphFrontend,
+    GraphQuery,
+    poisson_trace,
+    replay_trace,
+)
+
+GRAPH = "DBP"
+MAX_BATCH = 8
+BATCH_POINTS = (1, 4, 8)
+LOAD_MULTS = (0.5, 1.0, 2.0)
+LOAD_QUERIES = 24
+PPR_ITERS = 10
+
+
+def _tick_seconds(fe: GraphFrontend, make, batch: int, reps: int = 3) -> tuple:
+    """Median seconds of one coalesced tick at the given batch size.
+    Returns (seconds, last tick-log record)."""
+    ts = []
+    for _ in range(reps + 1):  # first rep is warmup (compile)
+        for i in range(batch):
+            fe.submit(make(i))
+        t0 = time.perf_counter()
+        fe.tick()
+        ts.append(time.perf_counter() - t0)
+    ts = sorted(ts[1:])
+    return ts[len(ts) // 2], fe.tick_log[-1]
+
+
+def run() -> Rows:
+    rows = Rows()
+    suite = graph_suite(graph_scale())
+    coo = suite[GRAPH]
+    n = coo.num_nodes
+    rng = np.random.default_rng(12)
+    srcs = rng.integers(0, n, size=4096).astype(int)
+
+    fe = GraphFrontend(max_batch=MAX_BATCH)
+    t0 = time.perf_counter()
+    reg = fe.register_graph(GRAPH, coo, variant="degree_sort", seed=0)
+    t_reg = time.perf_counter() - t0
+    wr = fe.warmup(probe=True)
+    rows.add(
+        f"serving/warmup/{GRAPH}",
+        (t_reg + wr.seconds) * 1e6,
+        f"preprocess_ms={t_reg*1e3:.1f} warm_ms={wr.seconds*1e3:.1f} "
+        f"decisions={wr.decisions} probes={wr.probes} "
+        f"cache_writes={wr.cache_writes} n={reg.report.num_nodes} "
+        f"m={reg.report.num_edges}",
+    )
+
+    # -- micro-batch amortization: BFS ticks at growing batch -------------
+    def mk_bfs(i):
+        return GraphQuery(
+            tenant=f"t{i % 4}", graph=GRAPH, kind="bfs",
+            source=int(srcs[i % srcs.size]),
+        )
+
+    t_full = None
+    for b in BATCH_POINTS:
+        bb = min(b, MAX_BATCH)
+        t_tick, info = _tick_seconds(fe, mk_bfs, bb)
+        if bb == MAX_BATCH:
+            t_full = t_tick
+        per_q = t_tick / bb
+        # modeled per-query bytes at this coalescing level: the tick's
+        # aggregate expanded edges ride one batched stream
+        mb = serving_query_bytes([info["edges"]], n, bb)
+        rows.add(
+            f"serving/batch/b{b}",
+            per_q * 1e6,
+            f"tick_us={t_tick*1e6:.0f} lanes={info['lanes']} "
+            f"levels={info['levels']} edges={info['edges']} "
+            f"modeled_query_bytes={mb:.3g}",
+        )
+
+    # -- PPR coalescing: the shared-index-stream win ------------------------
+    def mk_ppr(i):
+        return GraphQuery(
+            tenant=f"t{i % 4}", graph=GRAPH, kind="ppr",
+            source=int(srcs[i % srcs.size]), iters=PPR_ITERS,
+        )
+
+    m = reg.csr.num_edges
+    t1, _ = _tick_seconds(fe, mk_ppr, 1)
+    tB, _ = _tick_seconds(fe, mk_ppr, MAX_BATCH)
+    rows.add(
+        "serving/ppr_batch/b1",
+        t1 * 1e6,
+        f"iters={PPR_ITERS} "
+        f"modeled_query_bytes={ppr_batch_bytes(m, n, 1, PPR_ITERS):.3g}",
+    )
+    rows.add(
+        f"serving/ppr_batch/b{MAX_BATCH}",
+        tB / MAX_BATCH * 1e6,
+        f"iters={PPR_ITERS} tick_us={tB*1e6:.0f} "
+        f"per_query_speedup={t1 / max(tB / MAX_BATCH, 1e-12):.2f} "
+        f"modeled_query_bytes="
+        f"{ppr_batch_bytes(m, n, MAX_BATCH, PPR_ITERS) / MAX_BATCH:.3g}",
+    )
+
+    # -- saturation sweep: open-loop Poisson at fractions of saturation ----
+    sat_qps = MAX_BATCH / max(t_full, 1e-9)
+    for mult in LOAD_MULTS:
+        rate = mult * sat_qps
+        trace = poisson_trace(rate, LOAD_QUERIES, lambda r, i: mk_bfs(i), seed=42)
+        rep = replay_trace(fe, trace)
+        s = rep.stats()
+        model = ServingRoofline(
+            arrival_qps=rate, batch=MAX_BATCH, tick_seconds=t_full
+        )
+        wait = model.mean_wait_seconds
+        rows.add(
+            f"serving/load/{mult:g}x",
+            s["p50"] * 1e6,
+            f"rate_qps={rate:.0f} tput_qps={rep.throughput_qps:.0f} "
+            f"p99_us={s['p99']*1e6:.0f} mean_us={s['mean']*1e6:.0f} "
+            f"ticks={rep.ticks} done={s['count']} "
+            f"model_util={model.utilization:.2f} "
+            f"model_wait_us={'inf' if wait == float('inf') else f'{wait*1e6:.0f}'} "
+            f"model_sat_qps={model.saturation_qps:.0f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        os.environ["BENCH_SCALE"] = "small"
+        os.environ.setdefault("REPRO_BENCH_REPS", "1")
+        os.environ.setdefault("REPRO_BENCH_WARMUP", "1")
+    for r in run().emit():
+        print(r)

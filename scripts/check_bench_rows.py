@@ -31,6 +31,7 @@ REQUIRED_PREFIXES = (
     "fig6/",
     "fig7/",
     "fig8/",
+    "serving/",
     "executor/",
     "moe/",
 )

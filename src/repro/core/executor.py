@@ -563,6 +563,37 @@ def _jitted_binning(bin_range, num_bins, method, block, interpret, plan):
 
 
 @functools.lru_cache(maxsize=256)
+def _jitted_reduce_batched(
+    out_size, bin_range, num_bins, method, op, block, interpret, sorted_within
+):
+    """vmap of the reduce core over a leading batch axis. ``fused`` is
+    realized as the blockwise jnp sweep (the one fused rendering that is
+    vmap-safe on every backend); the two-phase methods vmap through
+    ``execute_reduce`` directly."""
+
+    def one(idx, val):
+        if method == "fused":
+            return _fused_reduce_jnp(
+                idx, val, out_size, op, block=block, sorted_within=sorted_within
+            )
+        return execute_reduce(
+            idx,
+            val,
+            out_size=out_size,
+            op=op,
+            method=method,
+            bin_range=bin_range,
+            num_bins=num_bins,
+            block=block,
+            interpret=interpret,
+            use_pallas=False,
+            sorted_within=sorted_within,
+        )
+
+    return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=256)
 def _jitted_reduce(
     out_size, bin_range, num_bins, method, op, block, interpret, plan, use_pallas,
     sorted_within,
@@ -1023,6 +1054,84 @@ class PBExecutor:
         fn = _jitted_reduce(
             out_size, d.bin_range, d.num_bins, d.method, op, self.block,
             self.interpret, d.plan, self.use_pallas, sorted_within,
+        )
+        return fn(indices, values)
+
+    # Reduce methods that survive vmap: the pure-XLA two-phase pair plus
+    # the jnp rendering of the fused sweep. pallas/hierarchical are
+    # per-stream (kernel grids / multi-pass plans don't batch).
+    BATCHED_REDUCE_METHODS = ("sort", "counting", "fused")
+
+    def reduce_streams(
+        self,
+        indices: jnp.ndarray,
+        values: jnp.ndarray,
+        *,
+        out_size: int,
+        op: str = "add",
+        bin_range: Optional[int] = None,
+        method: Optional[str] = None,
+        sorted_within: Optional[int] = None,
+    ) -> jnp.ndarray:
+        """Batched reduce over (B, m) streams -> (B, out_size, ...).
+
+        The serving-side counterpart of ``bin_streams`` (DESIGN.md §12):
+        many small frontiers — one per coalesced query — reduced under
+        ONE decision and ONE compiled vmap program, so per-query
+        planning cost is amortized across the batch. Each lane computes
+        exactly what ``reduce_stream`` at the same (method, bin_range)
+        would: the binning permutation depends on indices alone and the
+        apply runs per lane, so batched-vs-loop results are bit-for-bit
+        equal (tests/test_property.py asserts it). Methods outside
+        ``BATCHED_REDUCE_METHODS`` clamp to ``sort`` under a
+        ``+batch-clamp`` source tag, mirroring ``bin_streams``.
+        """
+        if op not in REDUCE_OPS:
+            raise ValueError(
+                f"reduce_streams only serves commutative reductions "
+                f"{REDUCE_OPS}; got op={op!r}."
+            )
+        if indices.ndim != 2:
+            raise ValueError(
+                f"reduce_streams wants (B, m) indices, got {indices.shape}"
+            )
+        flat = isinstance(values, jnp.ndarray) and values.ndim == 2
+        if method in (None, "auto"):
+            vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
+            d = self.decide(
+                out_size,
+                int(indices.shape[1]),
+                vdtype,
+                bin_range=bin_range,
+                flat_values=flat,
+                kind="reduce",
+                op=op,
+            )
+            if d.method not in self.BATCHED_REDUCE_METHODS:
+                d = self._finalize(
+                    "sort", out_size, bin_range, f"{d.source}+batch-clamp"
+                )
+                self._log_decision(
+                    {
+                        "kind": "reduce",
+                        "num_indices": out_size,
+                        "stream_len": int(indices.shape[1]),
+                        "method": d.method,
+                        "bin_range": d.bin_range,
+                        "source": d.source,
+                        "op": op,
+                    }
+                )
+        else:
+            if method not in self.BATCHED_REDUCE_METHODS:
+                raise ValueError(
+                    f"batched reduce supports {self.BATCHED_REDUCE_METHODS}, "
+                    f"got {method!r}"
+                )
+            d = self._finalize(method, out_size, bin_range, "caller")
+        fn = _jitted_reduce_batched(
+            out_size, d.bin_range, d.num_bins, d.method, op, self.block,
+            self.interpret, sorted_within,
         )
         return fn(indices, values)
 

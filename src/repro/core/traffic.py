@@ -473,6 +473,84 @@ def traversal_bytes(
     )
 
 
+# --- Serving counters (DESIGN.md §12) --------------------------------------
+#
+# A serving tick coalesces up to B compatible queries into one batched
+# kernel call. The byte win of coalescing is structural: per-level dense
+# state (one dist/rank row per lane) scales with B, but fixed per-tick
+# costs (planning, dispatch, the CSR offsets touch) are paid once — and
+# for PPR the index stream itself is shared across the whole batch
+# ((m, B) value block on ONE m-length index stream). These counters feed
+# ``roofline.ServingRoofline``'s queue model and benchmarks/serving_load.
+
+
+def ppr_batch_bytes(
+    num_tuples: int,
+    num_indices: int,
+    batch: int,
+    iters: int = 1,
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+) -> float:
+    """Sequential bytes of ``iters`` coalesced PPR power iterations over
+    ``batch`` lanes: the m-length index stream is read ONCE per iteration
+    for the whole batch (the lanes ride it as an (m, B) value block),
+    while contributions and the dense rank update scale with B. At B=1
+    this is the single-query cost; the per-query saving vs B singles is
+    exactly ``(B-1) * m * index_bytes`` per iteration."""
+    batch = max(1, batch)
+    per_iter = (
+        float(num_tuples) * index_bytes  # shared dst index stream
+        + float(num_tuples) * batch * value_bytes  # per-lane contributions
+        + 2.0 * num_indices * batch * value_bytes  # rank read + write per lane
+    )
+    return iters * per_iter
+
+
+def serving_tick_bytes(
+    level_edges,
+    num_indices: int,
+    batch: int,
+    method: str = "fused",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+) -> float:
+    """Modeled sequential bytes of ONE coalesced traversal tick serving
+    ``batch`` queries. ``level_edges`` is the batch-AGGREGATE per-level
+    expanded tuple count (what ``bfs_batched``/``sssp_batched`` report),
+    so the per-level stream term is already the whole batch's traffic;
+    the per-level dense update, however, is per lane (each query owns a
+    dist row) — ``traversal_level_bytes`` charges one, the remaining
+    ``batch - 1`` are added here."""
+    batch = max(1, batch)
+    total = 0.0
+    for e in level_edges:
+        e = int(e)
+        if e == 0:
+            continue
+        total += traversal_level_bytes(
+            e, num_indices, method, index_bytes, value_bytes
+        )
+        total += (batch - 1) * 2.0 * num_indices * value_bytes
+    return total
+
+
+def serving_query_bytes(
+    level_edges,
+    num_indices: int,
+    batch: int,
+    method: str = "fused",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+) -> float:
+    """Per-QUERY bytes of one coalesced tick: ``serving_tick_bytes``
+    amortized over the batch — the service-cost input of the
+    ``ServingRoofline`` queue model."""
+    return serving_tick_bytes(
+        level_edges, num_indices, batch, method, index_bytes, value_bytes
+    ) / max(1, batch)
+
+
 def pb_seconds(
     num_tuples: int, num_indices: int, bin_range: int, hw: HardwareModel
 ) -> float:

@@ -60,6 +60,12 @@ TRAVERSAL_METHODS = (
     "auto", "sort", "counting", "pallas", "hierarchical", "fused", "unbinned",
 )
 
+# The subset a BATCHED traversal may force: one decision + one vmapped
+# program covers every query lane (``PBExecutor.reduce_streams``), so
+# only the vmap-able reduce methods (plus the unbinned baseline) apply.
+# ``auto`` still consults ``decide`` and batch-clamps if needed.
+BATCHED_TRAVERSAL_METHODS = ("auto", "sort", "counting", "fused", "unbinned")
+
 
 def bucket_len(n: int, minimum: int = 256) -> int:
     """Next power-of-two at least ``minimum``: the static stream length a
@@ -161,12 +167,44 @@ class _LevelReducer:
             self.decisions.append({**e, "level": self._level})
         return out
 
+    def batched(self, idx, val, *, out_size: int, op: str):
+        """One level of MANY query lanes: (B, m) streams reduced under a
+        single decision through ``PBExecutor.reduce_streams`` — the
+        micro-batch coalescing the serving frontend rides (DESIGN.md
+        §12). ``unbinned`` vmaps the raw dense scatter, keeping the
+        baseline semantics identical per lane."""
+        if self.method == "unbinned":
+            from repro.kernels.ref import scatter_reduce_ref
+
+            return jax.vmap(
+                lambda i, v: scatter_reduce_ref(i, v, out_size, op=op)
+            )(idx, val)
+        sink: list = []
+        self.ex.add_decision_sink(sink)
+        try:
+            out = self.ex.reduce_streams(
+                idx, val, out_size=out_size, op=op, method=self.method
+            )
+        finally:
+            self.ex.remove_decision_sink(sink)
+        for e in sink:
+            self.decisions.append({**e, "level": self._level})
+        return out
+
 
 def _resolve(method: str):
     if method not in TRAVERSAL_METHODS:
         raise ValueError(
             f"unknown traversal method: {method!r} "
             f"(want one of {TRAVERSAL_METHODS})"
+        )
+
+
+def _resolve_batched(method: str):
+    if method not in BATCHED_TRAVERSAL_METHODS:
+        raise ValueError(
+            f"unknown batched traversal method: {method!r} "
+            f"(want one of {BATCHED_TRAVERSAL_METHODS})"
         )
 
 
@@ -394,8 +432,301 @@ def k_core(
 
 
 # ---------------------------------------------------------------------------
+# Micro-batched traversal: many source-vertex queries per reduce call.
+# ---------------------------------------------------------------------------
+
+
+def _pad_frontiers(fronts) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad a batch of host frontiers to one common power-of-two bucket:
+    (B, bf) ids + (B,) counts. One bucket for the whole batch keeps the
+    vmapped expansion at a single static shape per level."""
+    bf = bucket_len(max(f.size for f in fronts))
+    ids = np.zeros((len(fronts), bf), np.int32)
+    counts = np.zeros((len(fronts),), np.int32)
+    for q, f in enumerate(fronts):
+        ids[q, : f.size] = f
+        counts[q] = f.size
+    return jnp.asarray(ids), jnp.asarray(counts)
+
+
+def bfs_batched(
+    csr: CSR,
+    sources,
+    *,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+    max_iters: Optional[int] = None,
+    with_parents: bool = False,
+) -> TraversalResult:
+    """Level-synchronous BFS from MANY sources at once: each level is ONE
+    batched reduce over (B, bucket) per-query streams
+    (``PBExecutor.reduce_streams`` — one decision, one vmapped program
+    for the whole batch). Lane q computes exactly what ``bfs(csr,
+    sources[q])`` computes: the integer ``min``/``max`` relaxations are
+    order-free, and a lane whose frontier drained streams only identity
+    values, so its distances are final. This is the micro-batch
+    coalescing path the serving frontend ticks on (DESIGN.md §12).
+
+    Returns a ``TraversalResult`` whose ``dist`` (and ``parent``) carry a
+    leading batch axis; ``frontier_sizes``/``level_edges`` aggregate over
+    the batch.
+    """
+    _resolve_batched(method)
+    ex = executor or get_default_executor()
+    n = csr.num_nodes
+    srcs = np.atleast_1d(np.asarray(sources, np.int32))
+    if srcs.size == 0:
+        raise ValueError("bfs_batched needs at least one source")
+    if not ((srcs >= 0) & (srcs < n)).all():
+        raise ValueError(f"sources outside [0, {n}): {srcs}")
+    B = srcs.size
+    max_iters = n if max_iters is None else max_iters
+    offs_host = np.asarray(csr.offsets)
+    red = _LevelReducer(ex, method, None, None)
+
+    dist = jnp.full((B, n), _INT_MAX, jnp.int32)
+    dist = dist.at[jnp.arange(B), jnp.asarray(srcs)].set(0)
+    parent = None
+    if with_parents:
+        parent = jnp.full((B, n), -1, jnp.int32)
+        parent = parent.at[jnp.arange(B), jnp.asarray(srcs)].set(
+            jnp.asarray(srcs)
+        )
+    fronts = [np.asarray([s], np.int32) for s in srcs]
+    sizes = [B]
+    edges = []
+    level = 0
+    while any(f.size for f in fronts) and level < max_iters:
+        red.set_level(level)
+        per_q = [
+            int((offs_host[f + 1] - offs_host[f]).sum()) if f.size else 0
+            for f in fronts
+        ]
+        total = sum(per_q)
+        edges.append(total)
+        if total == 0:  # no lane expands: same trace semantics as bfs
+            level += 1
+            fronts = [np.zeros(0, np.int32) for _ in fronts]
+            sizes.append(0)
+            break
+        ids, counts = _pad_frontiers(fronts)
+        be = bucket_len(max(per_q))
+        nbr, srcv, _, ok = jax.vmap(
+            lambda i, c: _expand_frontier(csr.offsets, csr.neighs, i, c, be)
+        )(ids, counts)
+        val = jnp.where(ok, jnp.int32(level + 1), jnp.int32(_INT_MAX))
+        cand = red.batched(nbr, val, out_size=n, op="min")
+        newly = cand < dist
+        if with_parents:
+            pval = jnp.where(ok, srcv, jnp.int32(np.iinfo(np.int32).min))
+            pmax = red.batched(nbr, pval, out_size=n, op="max")
+            parent = jnp.where(newly, pmax, parent)
+        dist = jnp.where(newly, cand, dist)
+        newly_np = np.asarray(newly)
+        fronts = [np.flatnonzero(newly_np[q]).astype(np.int32) for q in range(B)]
+        sizes.append(int(sum(f.size for f in fronts)))
+        level += 1
+    return TraversalResult(
+        dist=dist,
+        parent=parent,
+        levels=level,
+        converged=not any(f.size for f in fronts),
+        frontier_sizes=tuple(sizes),
+        level_edges=tuple(edges),
+        decisions=tuple(red.decisions),
+    )
+
+
+def sssp_batched(
+    csr: CSR,
+    weights: jnp.ndarray,
+    sources,
+    *,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+    max_iters: Optional[int] = None,
+) -> TraversalResult:
+    """Frontier-driven SSSP from MANY sources: the batched analogue of
+    ``sssp`` (see ``bfs_batched`` for the coalescing contract). ``min``
+    over float32 is order-free, so lane q is bit-for-bit ``sssp(csr,
+    weights, sources[q])`` under the same reduce method."""
+    _resolve_batched(method)
+    ex = executor or get_default_executor()
+    n = csr.num_nodes
+    if weights.shape[0] != csr.num_edges:
+        raise ValueError(
+            f"weights must align with csr.neighs: {weights.shape[0]} != "
+            f"{csr.num_edges}"
+        )
+    srcs = np.atleast_1d(np.asarray(sources, np.int32))
+    if srcs.size == 0:
+        raise ValueError("sssp_batched needs at least one source")
+    if not ((srcs >= 0) & (srcs < n)).all():
+        raise ValueError(f"sources outside [0, {n}): {srcs}")
+    B = srcs.size
+    w = weights.astype(jnp.float32)
+    max_iters = n if max_iters is None else max_iters
+    offs_host = np.asarray(csr.offsets)
+    red = _LevelReducer(ex, method, None, None)
+
+    dist = jnp.full((B, n), _F32_MAX, jnp.float32)
+    dist = dist.at[jnp.arange(B), jnp.asarray(srcs)].set(0.0)
+    fronts = [np.asarray([s], np.int32) for s in srcs]
+    sizes = [B]
+    edges = []
+    rounds = 0
+    while any(f.size for f in fronts) and rounds < max_iters:
+        red.set_level(rounds)
+        per_q = [
+            int((offs_host[f + 1] - offs_host[f]).sum()) if f.size else 0
+            for f in fronts
+        ]
+        total = sum(per_q)
+        edges.append(total)
+        if total == 0:
+            rounds += 1
+            fronts = [np.zeros(0, np.int32) for _ in fronts]
+            sizes.append(0)
+            break
+        ids, counts = _pad_frontiers(fronts)
+        be = bucket_len(max(per_q))
+        nbr, srcv, pos, ok = jax.vmap(
+            lambda i, c: _expand_frontier(csr.offsets, csr.neighs, i, c, be)
+        )(ids, counts)
+        relax = jnp.take_along_axis(dist, srcv, axis=1) + w[pos]
+        val = jnp.where(ok, relax, jnp.float32(_F32_MAX))
+        cand = red.batched(nbr, val, out_size=n, op="min")
+        improved = cand < dist
+        dist = jnp.where(improved, cand, dist)
+        improved_np = np.asarray(improved)
+        fronts = [
+            np.flatnonzero(improved_np[q]).astype(np.int32) for q in range(B)
+        ]
+        sizes.append(int(sum(f.size for f in fronts)))
+        rounds += 1
+    return TraversalResult(
+        dist=dist,
+        parent=None,
+        levels=rounds,
+        converged=not any(f.size for f in fronts),
+        frontier_sizes=tuple(sizes),
+        level_edges=tuple(edges),
+        decisions=tuple(red.decisions),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Personalized PageRank: restart mass as an op=add reduce stream.
+# ---------------------------------------------------------------------------
+
+
+class PPRResult(NamedTuple):
+    """Personalized PageRank: ranks + how the reductions ran."""
+
+    ranks: jnp.ndarray  # (n,) single query / (B, n) batched
+    iters: int
+    decisions: Tuple[dict, ...]  # executor decisions, tagged with "level"
+
+
+def personalized_pagerank(
+    csr: CSR,
+    sources=None,
+    *,
+    iters: int = 20,
+    damp: float = 0.85,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+) -> PPRResult:
+    """Personalized PageRank by power iteration over the CSR edge stream:
+    every iteration is ONE commutative ``op="add"`` reduce of (neighbor,
+    contribution) tuples — the same stream ``pagerank_fused`` pushes —
+    with the restart mass re-injected at the source instead of uniformly:
+
+        ranks <- (1 - damp) * e_source + damp * A^T (ranks / outdeg)
+
+    ``sources=None`` is the uniform restart (global PageRank on a CSR);
+    a scalar personalizes to one vertex; an array of B sources runs B
+    queries through ONE batched reduce per iteration — contributions for
+    all queries ride the SAME index stream as an (m, B) value block, so
+    the index traffic (and the executor decision) is paid once per
+    iteration for the whole batch. That is the serving frontend's
+    coalesced PPR tick (DESIGN.md §12). Dangling vertices follow the
+    repo-wide PageRank semantics (out-degree clamped to 1: their mass is
+    dropped, not redistributed), so results are comparable with
+    ``pagerank_*`` and the numpy oracle below.
+    """
+    _resolve(method)
+    if method in ("pallas", "hierarchical"):
+        # (m, B) value blocks: reduce_stream would clamp pallas to sort
+        # anyway; reject up front so forced methods mean what they say
+        raise ValueError(
+            f"personalized_pagerank supports methods "
+            f"{('auto', 'sort', 'counting', 'fused', 'unbinned')}, got {method!r}"
+        )
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    ex = executor or get_default_executor()
+    n, m = csr.num_nodes, csr.num_edges
+    from repro.core.graph import segment_ids_from_offsets
+
+    src = segment_ids_from_offsets(csr.offsets, m)
+    dst = csr.neighs
+    outdeg = jnp.maximum(
+        csr.offsets[1:] - csr.offsets[:-1], 1
+    ).astype(jnp.float32)
+
+    single = sources is None or np.ndim(sources) == 0
+    if sources is None:
+        restart = jnp.full((n, 1), 1.0 / n, jnp.float32)
+    else:
+        srcs = np.atleast_1d(np.asarray(sources, np.int32))
+        if srcs.size == 0:
+            raise ValueError("personalized_pagerank needs >= 1 source")
+        if not ((srcs >= 0) & (srcs < n)).all():
+            raise ValueError(f"sources outside [0, {n}): {srcs}")
+        restart = (
+            jnp.zeros((n, srcs.size), jnp.float32)
+            .at[jnp.asarray(srcs), jnp.arange(srcs.size)]
+            .set(1.0)
+        )
+    red = _LevelReducer(ex, method, None, None)
+    ranks = restart
+    for it in range(iters):
+        red.set_level(it)
+        contrib = ranks / outdeg[:, None]
+        incoming = red(dst, jnp.take(contrib, src, axis=0), out_size=n, op="add")
+        ranks = (1.0 - damp) * restart + damp * incoming
+    out = ranks[:, 0] if single else ranks.T
+    return PPRResult(ranks=out, iters=iters, decisions=tuple(red.decisions))
+
+
+# ---------------------------------------------------------------------------
 # Oracles (numpy, tests/benchmarks only).
 # ---------------------------------------------------------------------------
+
+
+def personalized_pagerank_oracle(
+    csr: CSR, source=None, iters: int = 20, damp: float = 0.85
+) -> np.ndarray:
+    """float64 power iteration with the same semantics as
+    ``personalized_pagerank`` (clamped out-degree, dropped dangling
+    mass) — the allclose target for the serving tests."""
+    off, nei = np.asarray(csr.offsets), np.asarray(csr.neighs)
+    n = csr.num_nodes
+    src = np.repeat(np.arange(n), np.diff(off))
+    outdeg = np.maximum(np.diff(off), 1).astype(np.float64)
+    if source is None:
+        restart = np.full(n, 1.0 / n)
+    else:
+        restart = np.zeros(n)
+        restart[int(source)] = 1.0
+    ranks = restart.copy()
+    for _ in range(iters):
+        contrib = ranks / outdeg
+        incoming = np.zeros(n)
+        np.add.at(incoming, nei, contrib[src])
+        ranks = (1.0 - damp) * restart + damp * incoming
+    return ranks
 
 
 def k_core_oracle(csr: CSR, k: int) -> np.ndarray:

@@ -43,13 +43,13 @@ def main(argv=None):
         params, _ = unbox(T.init_params(jax.random.PRNGKey(0), cfg))
         eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len)
         rng = np.random.default_rng(0)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for rid in range(args.requests):
             plen = int(rng.integers(8, args.max_len // 4))
             prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
             eng.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
         done = eng.run_until_drained()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         tok = sum(len(r.out) for r in done)
         print(f"[serve] {len(done)} requests, {tok} tokens, {tok/max(dt,1e-9):.1f} tok/s")
         return len(done)

@@ -362,6 +362,54 @@ class TraversalRoofline:
 
 
 @dataclass(frozen=True)
+class ServingRoofline:
+    """Queueing view of coalesced graph-query serving (DESIGN.md §12).
+
+    Open-loop Poisson arrivals at ``arrival_qps`` against a server that
+    ticks: one tick serves up to ``batch`` coalesced queries in
+    ``tick_seconds`` (measured, or the bandwidth-bound floor
+    ``traffic.serving_tick_bytes / hbm_bw``). With deterministic batch
+    service this is an M/D/1 queue in units of ticks: utilization
+    ``rho = lambda * s / B``, mean queueing wait ``rho*s / (2(1-rho))``
+    (Pollaczek-Khinchine with zero service variance), saturating at
+    ``B / s`` qps. The saturation sweep in benchmarks/serving_load.py
+    reports the measured curve next to this model: below saturation
+    latency is flat-ish, past it the backlog — and p99 — grows without
+    bound, which is why max_batch (not kernel speed) sets the knee.
+    """
+
+    arrival_qps: float
+    batch: int
+    tick_seconds: float
+
+    @property
+    def saturation_qps(self) -> float:
+        """Throughput ceiling: every tick full."""
+        return self.batch / max(self.tick_seconds, 1e-30)
+
+    @property
+    def utilization(self) -> float:
+        return self.arrival_qps / self.saturation_qps
+
+    @property
+    def stable(self) -> bool:
+        return self.utilization < 1.0
+
+    @property
+    def mean_wait_seconds(self) -> float:
+        """M/D/1 mean queueing delay; inf at/past saturation."""
+        rho = self.utilization
+        if rho >= 1.0:
+            return float("inf")
+        return rho * self.tick_seconds / (2.0 * (1.0 - rho))
+
+    @property
+    def mean_latency_seconds(self) -> float:
+        """Queueing wait + one service tick."""
+        return self.mean_wait_seconds + self.tick_seconds
+
+
+@dataclass(frozen=True)
 class PreprocessRoofline:
     """HBM-roofline view of the preprocessing pipeline (DESIGN.md §10):
     the modeled sequential bytes of every stage (degrees + mapping +

@@ -1,0 +1,684 @@
+"""Multi-tenant graph-query serving on the PB engine (DESIGN.md §12).
+
+The north star is serving heavy graph-query traffic, and the PR 1-5
+stack was built for exactly that shape of load: many *small* queries
+(one source vertex each) against a few *large* preprocessed graphs. This
+module is the frontend that turns the stack into a query engine:
+
+  admission  — requests (``GraphQuery``: BFS / SSSP / personalized
+      PageRank per-source; PageRank / k-core global) enter per-tenant
+      FIFO queues. Admission is round-robin across tenants, so a tenant
+      flooding the queue cannot starve the others (the fairness test
+      asserts it).
+
+  coalescing — every ``tick`` picks ONE compatible group (same graph,
+      same kind, same parameters — chosen by the globally oldest queue
+      head, which bounds staleness) and serves up to ``max_batch``
+      queries of that group as ONE batched kernel call:
+      ``bfs_batched`` / ``sssp_batched`` / ``personalized_pagerank`` ride
+      ``PBExecutor.reduce_streams`` — one decision, one vmapped program,
+      per-query planning amortized across the batch. Lane results are
+      bit-for-bit what the single-query kernels produce (the coalescing
+      contract ``tests/test_graph_serving.py`` asserts), so batching is
+      a pure latency/throughput trade, never a numerics one. Admitted
+      lane counts are padded to a power of two (sources repeated, spare
+      rows discarded) so compiled program shapes stay O(log max_batch).
+
+  warm plans — ``register_graph`` preprocesses via ``PreprocessPipeline``
+      (reorder + PB rebuild) at startup, and ``warmup`` pre-``decide``s
+      every reduce cache key serving can generate: the executor's reduce
+      keys bucket stream_len by log2 (DESIGN.md §11.3), so enumerating
+      the power-of-two buckets up to ``bucket_len(m)`` for each
+      (op, dtype) pair the kernels use covers EVERY frontier a query can
+      expand. After warmup no request pays autotune (the warm-cache
+      invariant test wraps ``cache.put``); compile warmth is best-effort
+      via probe queries at the serving lane widths.
+
+  clock      — all timing goes through an injected ``Clock``
+      (``perf_counter``-backed; monotonic, unlike the ``time.time()``
+      the old Engine used). ``FakeClock`` + ``poisson_trace`` +
+      ``replay_trace`` make admission order, batching, fairness and the
+      percentile math deterministic and assertable bit-for-bit in CI —
+      zero wall-clock sleeps.
+
+Traffic/roofline counterparts: ``traffic.serving_query_bytes``,
+``roofline.ServingRoofline``; the load benchmark is
+``benchmarks/serving_load.py``; the CLI is ``launch/serve_graphs.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import PBExecutor, get_default_executor
+from repro.core.graph import COO
+from repro.core.preprocess import PreprocessPipeline, PreprocessReport
+from repro.core.traversal import (
+    BATCHED_TRAVERSAL_METHODS,
+    bfs_batched,
+    bucket_len,
+    k_core,
+    personalized_pagerank,
+    sssp_batched,
+)
+
+QUERY_KINDS = ("bfs", "sssp", "ppr", "pagerank", "kcore")
+
+# Kinds whose answer depends on a source vertex: these coalesce into
+# batched lanes. "pagerank"/"kcore" are graph-global — one computation
+# serves every query of the group (memoized per (graph, kind, param)).
+_SOURCE_KINDS = ("bfs", "sssp", "ppr")
+
+
+# ---------------------------------------------------------------------------
+# Clocks: every timestamp the frontend takes goes through one of these.
+# ---------------------------------------------------------------------------
+
+
+class Clock:
+    """Monotonic wall clock (``time.perf_counter``).
+
+    ``time.time()`` is NOT monotonic (NTP steps move it backwards), so
+    latency fields computed from it can go negative — the Engine bug
+    this PR fixes. Everything that measures a duration must go through
+    ``now()`` here or on an injected fake.
+    """
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def wait_until(self, t: float) -> None:
+        """Sleep until ``now() >= t`` (benchmark drivers only — tests
+        use ``FakeClock`` and never sleep)."""
+        while True:
+            dt = t - self.now()
+            if dt <= 0:
+                return
+            time.sleep(min(dt, 0.05))
+
+
+class FakeClock(Clock):
+    """Manually advanced clock: deterministic time for CI.
+
+    ``wait_until`` JUMPS instead of sleeping, so a replayed trace runs
+    as fast as the kernels do while every latency number is an exact
+    function of the trace + the frontend's ``tick_cost``.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock backwards: {dt}")
+        self._t += dt
+
+    def wait_until(self, t: float) -> None:
+        if t > self._t:
+            self._t = t
+
+
+def percentile(xs, p: float) -> float:
+    """Nearest-rank percentile: ``sorted(xs)[ceil(p/100 * N) - 1]``.
+
+    No interpolation — the value returned is always an element of
+    ``xs``, and the math is exact in float, so CI can assert percentile
+    outputs bit-for-bit (np.percentile's linear interpolation would make
+    the assertion depend on float rounding of the rank fraction).
+    """
+    s = sorted(xs)
+    if not s:
+        return float("nan")
+    k = int(math.ceil(p / 100.0 * len(s))) - 1
+    return s[max(0, min(len(s) - 1, k))]
+
+
+def latency_stats(queries, percentiles: Tuple[float, ...] = (50.0, 99.0)) -> dict:
+    """Latency summary over completed queries (submit -> done)."""
+    lats = [q.t_done - q.t_submit for q in queries]
+    out = {
+        "count": len(lats),
+        "mean": sum(lats) / len(lats) if lats else float("nan"),
+        "max": max(lats) if lats else float("nan"),
+    }
+    for p in percentiles:
+        out[f"p{p:g}"] = percentile(lats, p)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Queries and the graph registry.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphQuery:
+    """One request. ``source`` / ``iters`` / ``k`` are interpreted per
+    ``kind``; vertex ids are in the graph's ORIGINAL id space — the
+    frontend applies (and inverts) the preprocess relabeling, so tenants
+    never see reordered ids."""
+
+    tenant: str
+    graph: str
+    kind: str  # one of QUERY_KINDS
+    source: int = 0  # bfs / sssp / ppr
+    iters: int = 10  # ppr / pagerank power iterations
+    k: int = 2  # kcore threshold
+    qid: int = -1  # assigned at submit
+    t_submit: float = 0.0
+    t_start: float = 0.0  # admission into a tick
+    t_done: float = 0.0
+    result: Optional[np.ndarray] = None  # dense per-vertex answer
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def wait(self) -> float:
+        return self.t_start - self.t_submit
+
+
+@dataclasses.dataclass
+class RegisteredGraph:
+    """One preprocessed tenant-visible graph."""
+
+    name: str
+    csr: "object"  # core.graph.CSR (reordered layout)
+    new_ids: np.ndarray  # old id -> new id (PreprocessPipeline mapping)
+    weights: jnp.ndarray  # per-CSR-edge sssp weights (relabeled order)
+    report: PreprocessReport
+
+
+@dataclasses.dataclass
+class WarmupReport:
+    """What startup warmup did — the serving-side compile/tune budget."""
+
+    seconds: float
+    decisions: int  # reduce cache keys pre-decided
+    probes: int  # probe kernel calls (compile warmth, best-effort)
+    cache_writes: int  # autotune entries written DURING warmup
+
+
+def _lane_bucket(b: int, cap: int) -> int:
+    """Admitted lane counts pad to the next power of two (<= cap): the
+    batched kernels then compile O(log max_batch) distinct lane widths
+    instead of one program per batch size."""
+    p = 1
+    while p < b:
+        p *= 2
+    return min(p, cap)
+
+
+# ---------------------------------------------------------------------------
+# The frontend.
+# ---------------------------------------------------------------------------
+
+
+class GraphFrontend:
+    """Multi-tenant graph-query engine over preprocessed PB graphs.
+
+    Parameters
+    ----------
+    executor:  the PBExecutor every kernel routes through (process
+               default when None). Its autotune cache is what ``warmup``
+               pre-populates.
+    max_batch: lane cap per tick — how many compatible queries one
+               batched kernel call serves.
+    method:    reduce method for every query kernel; one of
+               ``BATCHED_TRAVERSAL_METHODS`` ("auto" consults the warmed
+               decision cache per level).
+    clock:     timing source (``Clock()`` = perf_counter; inject a
+               ``FakeClock`` for deterministic tests).
+    tick_cost: deterministic per-tick service time added to a FakeClock
+               after each batch (real clocks measure, fakes must be
+               told) — gives replayed traces nontrivial exact latencies.
+    """
+
+    def __init__(
+        self,
+        *,
+        executor: Optional[PBExecutor] = None,
+        max_batch: int = 8,
+        method: str = "auto",
+        clock: Optional[Clock] = None,
+        tick_cost: float = 0.0,
+    ):
+        if method not in BATCHED_TRAVERSAL_METHODS:
+            raise ValueError(
+                f"serving method must be batchable {BATCHED_TRAVERSAL_METHODS}, "
+                f"got {method!r}"
+            )
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.ex = executor or get_default_executor()
+        self.max_batch = max_batch
+        self.method = method
+        self.clock = clock or Clock()
+        self.tick_cost = float(tick_cost)
+        self._graphs: Dict[str, RegisteredGraph] = {}
+        # per-tenant FIFO queues, in first-seen tenant order (the
+        # round-robin ring); _rr rotates the ring head every tick
+        self._queues: "OrderedDict[str, Deque[GraphQuery]]" = OrderedDict()
+        self._rr = 0
+        self._seq = 0
+        self._memo: Dict[tuple, np.ndarray] = {}  # global-kind results
+        self.completed: List[GraphQuery] = []
+        self.ticks = 0
+        self.tick_log: List[dict] = []  # one record per tick (bench feed)
+        self.warm_report: Optional[WarmupReport] = None
+
+    # -- registry ----------------------------------------------------------
+
+    def register_graph(
+        self,
+        name: str,
+        coo: COO,
+        *,
+        variant: str = "degree_sort",
+        build_method: str = "auto",
+        weights: Optional[jnp.ndarray] = None,
+        seed: int = 0,
+    ) -> RegisteredGraph:
+        """Preprocess ``coo`` (reorder + PB rebuild via
+        ``PreprocessPipeline``) and admit it to the registry.
+
+        ``weights`` (sssp) are per-slot of the REBUILT CSR; None draws
+        deterministic uniform(0.1, 1.1) weights from ``seed``, so two
+        frontends registering the same graph with the same seed serve
+        bit-identical sssp answers (the coalescing tests rely on it).
+        """
+        if name in self._graphs:
+            raise ValueError(f"graph {name!r} already registered")
+        pipe = PreprocessPipeline(
+            variant=variant,
+            build_method=build_method,
+            with_csc=False,  # every serving kernel pushes on the CSR
+            executor=self.ex,
+        )
+        res = pipe.run(coo)
+        m = res.csr.num_edges
+        if weights is None:
+            rng = np.random.default_rng(seed)
+            w = jnp.asarray(rng.random(m, dtype=np.float32) + 0.1)
+        else:
+            if int(weights.shape[0]) != m:
+                raise ValueError(
+                    f"weights must align with the rebuilt CSR: "
+                    f"{weights.shape[0]} != {m}"
+                )
+            w = jnp.asarray(weights, jnp.float32)
+        g = RegisteredGraph(
+            name=name,
+            csr=res.csr,
+            new_ids=np.asarray(res.new_ids),
+            weights=w,
+            report=res.report,
+        )
+        self._graphs[name] = g
+        return g
+
+    @property
+    def graphs(self) -> Tuple[str, ...]:
+        return tuple(self._graphs)
+
+    # -- warmup ------------------------------------------------------------
+
+    def warmup(self, *, probe: bool = True) -> WarmupReport:
+        """Pre-decide every reduce cache key serving can generate, and
+        (``probe``) run truncated probe queries for compile warmth.
+
+        Decision warmth is EXACT: reduce keys bucket stream_len by log2
+        (executor ``_key``), frontier streams are padded to power-of-two
+        buckets >= 256 and never exceed ``bucket_len(m)``, and the PPR /
+        PageRank stream is exactly ``m`` — so enumerating those buckets
+        for each (op, dtype) pair the kernels use covers every decide
+        serving will issue. With autotune on, all measurement (and all
+        ``cache.put`` traffic) happens HERE; afterwards every decide is
+        a cache hit (the warm-cache invariant test asserts zero puts
+        post-warmup).
+        """
+        t0 = time.perf_counter()
+        decided = 0
+        probes = 0
+        writes0 = len(self.ex.cache.mem)
+        # (op, value dtype) pairs serving kernels reduce with:
+        #   bfs levels (min,i32) + parents (max,i32), sssp (min,f32),
+        #   kcore decrements (add,i32), ppr/pagerank mass (add,f32)
+        pairs = (
+            ("min", jnp.int32),
+            ("max", jnp.int32),
+            ("min", jnp.float32),
+            ("add", jnp.int32),
+            ("add", jnp.float32),
+        )
+        for g in self._graphs.values():
+            n = g.csr.num_nodes
+            m = max(1, g.csr.num_edges)
+            lengths = set()
+            L = bucket_len(1)  # the minimum frontier bucket (256)
+            while L <= bucket_len(m):
+                lengths.add(L)
+                L *= 2
+            lengths.add(m)  # the exact ppr/pagerank edge stream
+            for op, dt in pairs:
+                for sl in sorted(lengths):
+                    self.ex.decide(n, sl, dt, kind="reduce", op=op)
+                    decided += 1
+        if probe:
+            for g in self._graphs.values():
+                probes += self._probe(g)
+        self.warm_report = WarmupReport(
+            seconds=time.perf_counter() - t0,
+            decisions=decided,
+            probes=probes,
+            cache_writes=len(self.ex.cache.mem) - writes0,
+        )
+        return self.warm_report
+
+    def _probe(self, g: RegisteredGraph) -> int:
+        """Best-effort compile warmth: run each batched kernel once at
+        EVERY power-of-two lane width serving can admit (compiled
+        programs are keyed on (lanes, level bucket)), with sources
+        spread across the vertex range so the probes walk representative
+        level-bucket trajectories. PPR compiles per (lanes, m) and the
+        power loop reuses one program, so iters=1 covers it."""
+        n = g.csr.num_nodes
+        probes = 0
+        B = 1
+        while True:
+            srcs = [int(i * n / B) % n for i in range(B)]
+            bfs_batched(g.csr, srcs, executor=self.ex, method=self.method)
+            sssp_batched(
+                g.csr, g.weights, srcs, executor=self.ex, method=self.method
+            )
+            personalized_pagerank(
+                g.csr, srcs, iters=1, executor=self.ex, method=self.method
+            )
+            probes += 3
+            if B >= self.max_batch:
+                break
+            B = min(B * 2, self.max_batch)
+        return probes
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, q: GraphQuery, at: Optional[float] = None) -> int:
+        """Enqueue one query; returns its qid. ``at`` stamps a nominal
+        arrival time (open-loop traces: latency accrues from when the
+        request WOULD have arrived, not from when the driver got around
+        to submitting it)."""
+        if q.graph not in self._graphs:
+            raise ValueError(f"unknown graph {q.graph!r} (have {self.graphs})")
+        if q.kind not in QUERY_KINDS:
+            raise ValueError(f"unknown kind {q.kind!r} (want one of {QUERY_KINDS})")
+        n = self._graphs[q.graph].csr.num_nodes
+        if q.kind in _SOURCE_KINDS and not 0 <= q.source < n:
+            raise ValueError(f"source {q.source} outside [0, {n}) for {q.graph!r}")
+        if q.kind in ("ppr", "pagerank") and q.iters < 1:
+            raise ValueError(f"iters must be >= 1, got {q.iters}")
+        q.qid = self._seq
+        self._seq += 1
+        q.t_submit = float(at) if at is not None else self.clock.now()
+        if q.tenant not in self._queues:
+            self._queues[q.tenant] = deque()
+        self._queues[q.tenant].append(q)
+        return q.qid
+
+    def pending_count(self) -> int:
+        return sum(len(dq) for dq in self._queues.values())
+
+    @staticmethod
+    def _group_of(q: GraphQuery) -> tuple:
+        """Coalescing key: queries in one batched tick must agree on it."""
+        if q.kind == "ppr" or q.kind == "pagerank":
+            return (q.graph, q.kind, q.iters)
+        if q.kind == "kcore":
+            return (q.graph, q.kind, q.k)
+        return (q.graph, q.kind, None)
+
+    def _admit(self) -> Tuple[List[GraphQuery], Optional[tuple]]:
+        """Pick the tick's group and drain up to ``max_batch`` matching
+        queries, round-robin across tenants.
+
+        Group choice: the globally oldest QUEUE HEAD (each tenant's
+        oldest query). That head is always admitted, so the oldest head
+        strictly progresses every tick and no query waits forever —
+        starvation-freedom regardless of what other tenants flood.
+        Within the group, tenants are drained one query per round
+        starting at a rotating ring position, so a full batch splits
+        evenly across tenants with matching work.
+        """
+        heads = [
+            (dq[0].qid, t) for t, dq in self._queues.items() if dq
+        ]
+        if not heads:
+            return [], None
+        _, oldest_tenant = min(heads)
+        group = self._group_of(self._queues[oldest_tenant][0])
+        ring = list(self._queues)
+        start = self._rr % len(ring)
+        ring = ring[start:] + ring[:start]
+        self._rr += 1
+        admitted: List[GraphQuery] = []
+        progress = True
+        while len(admitted) < self.max_batch and progress:
+            progress = False
+            for t in ring:
+                if len(admitted) >= self.max_batch:
+                    break
+                dq = self._queues[t]
+                for i, q in enumerate(dq):
+                    if self._group_of(q) == group:
+                        del dq[i]
+                        admitted.append(q)
+                        progress = True
+                        break
+        # per-tenant order within a group is preserved (each pass takes
+        # the tenant's first match); qid order restores a deterministic
+        # lane layout independent of the ring rotation
+        admitted.sort(key=lambda q: q.qid)
+        return admitted, group
+
+    # -- the tick ----------------------------------------------------------
+
+    def tick(self) -> List[GraphQuery]:
+        """Serve one coalesced group: admit, execute ONE batched kernel
+        call, complete. Returns the queries finished this tick."""
+        admitted, group = self._admit()
+        if not admitted:
+            return []
+        t_start = self.clock.now()
+        for q in admitted:
+            q.t_start = t_start
+        info = self._execute(group, admitted)
+        if self.tick_cost:
+            adv = getattr(self.clock, "advance", None)
+            if adv is not None:  # only fakes are told service time
+                adv(self.tick_cost)
+        t_done = self.clock.now()
+        for q in admitted:
+            q.t_done = t_done
+        self.ticks += 1
+        self.completed.extend(admitted)
+        self.tick_log.append(
+            {
+                "tick": self.ticks - 1,
+                "graph": group[0],
+                "kind": group[1],
+                "batch": len(admitted),
+                **info,
+            }
+        )
+        return admitted
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> List[GraphQuery]:
+        done: List[GraphQuery] = []
+        for _ in range(max_ticks):
+            out = self.tick()
+            if not out:
+                break
+            done.extend(out)
+        return done
+
+    def _execute(self, group: tuple, queries: List[GraphQuery]) -> dict:
+        graph, kind, param = group
+        g = self._graphs[graph]
+        nid = g.new_ids
+        if kind in _SOURCE_KINDS:
+            # original-id sources -> reordered layout; lanes padded to a
+            # power of two (first source repeated; spare rows discarded)
+            srcs = np.asarray([nid[q.source] for q in queries], np.int32)
+            B = _lane_bucket(srcs.size, self.max_batch)
+            padded = np.concatenate(
+                [srcs, np.full(B - srcs.size, srcs[0], np.int32)]
+            )
+            if kind == "bfs":
+                r = bfs_batched(
+                    g.csr, padded, executor=self.ex, method=self.method
+                )
+                rows, levels = np.asarray(r.dist), r.levels
+                edges = int(sum(r.level_edges))
+            elif kind == "sssp":
+                r = sssp_batched(
+                    g.csr, g.weights, padded, executor=self.ex, method=self.method
+                )
+                rows, levels = np.asarray(r.dist), r.levels
+                edges = int(sum(r.level_edges))
+            else:  # ppr
+                r = personalized_pagerank(
+                    g.csr, padded, iters=param, executor=self.ex, method=self.method
+                )
+                rows, levels = np.asarray(r.ranks), r.iters
+                edges = r.iters * g.csr.num_edges * B
+            for i, q in enumerate(queries):
+                # invert the relabeling: row is new-id-indexed
+                q.result = rows[i][nid]
+            return {"lanes": int(B), "levels": int(levels), "edges": edges}
+        # graph-global kinds: one computation, memoized, shared
+        mkey = (graph, kind, param)
+        cached = mkey in self._memo
+        if not cached:
+            if kind == "pagerank":
+                r = personalized_pagerank(
+                    g.csr, None, iters=param, executor=self.ex, method=self.method
+                )
+                self._memo[mkey] = np.asarray(r.ranks)[nid]
+                levels, edges = r.iters, r.iters * g.csr.num_edges
+            else:  # kcore
+                r = k_core(g.csr, param, executor=self.ex, method=self.method)
+                self._memo[mkey] = np.asarray(r.in_core)[nid]
+                levels, edges = r.rounds, 0
+        else:
+            levels, edges = 0, 0
+        for q in queries:
+            q.result = self._memo[mkey]
+        return {"lanes": 1, "levels": int(levels), "edges": int(edges), "memo": cached}
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats(self, tenant: Optional[str] = None) -> dict:
+        qs = [
+            q for q in self.completed if tenant is None or q.tenant == tenant
+        ]
+        return latency_stats(qs)
+
+
+# ---------------------------------------------------------------------------
+# Traces: seeded open-loop arrivals + deterministic replay.
+# ---------------------------------------------------------------------------
+
+
+def poisson_trace(
+    rate_qps: float, num_queries: int, make_query, *, seed: int = 0
+) -> List[Tuple[float, GraphQuery]]:
+    """Seeded open-loop Poisson arrivals: ``num_queries`` (arrival_time,
+    query) pairs with exponential inter-arrival gaps at ``rate_qps``.
+    ``make_query(rng, i)`` builds the i-th query (tenant/graph/kind mix
+    is the caller's policy). Same seed -> bit-identical trace.
+    """
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps must be > 0, got {rate_qps}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_qps, size=num_queries)
+    times = np.cumsum(gaps)
+    return [(float(times[i]), make_query(rng, i)) for i in range(num_queries)]
+
+
+@dataclasses.dataclass
+class TraceReport:
+    """One replayed trace: completions + exact timing breakdown."""
+
+    completed: List[GraphQuery]
+    ticks: int
+    span_seconds: float  # first arrival -> last completion (clock time)
+
+    @property
+    def throughput_qps(self) -> float:
+        if self.span_seconds <= 0:
+            return float("inf") if self.completed else 0.0
+        return len(self.completed) / self.span_seconds
+
+    def stats(self, tenant: Optional[str] = None) -> dict:
+        qs = [
+            q
+            for q in self.completed
+            if tenant is None or q.tenant == tenant
+        ]
+        return latency_stats(qs)
+
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(sorted({q.tenant for q in self.completed}))
+
+
+def replay_trace(
+    frontend: GraphFrontend,
+    trace: List[Tuple[float, GraphQuery]],
+    *,
+    max_ticks: int = 100_000,
+) -> TraceReport:
+    """Drive ``frontend`` through an open-loop arrival trace.
+
+    Arrivals are injected when the frontend's clock reaches their
+    timestamp (``submit(at=...)`` stamps the NOMINAL arrival, so latency
+    is open-loop: waiting in the driver counts). When nothing is
+    pending, the clock waits for the next arrival — a ``FakeClock``
+    jumps, so CI replays sleep zero wall-clock seconds; a real clock
+    sleeps, giving the benchmark true sustained-rate behavior.
+    Deterministic end to end under a FakeClock: same trace + same
+    frontend config -> identical ticks, batches and latency numbers.
+    """
+    clock = frontend.clock
+    order = sorted(trace, key=lambda a: a[0])
+    t0 = clock.now()
+    completed: List[GraphQuery] = []
+    i = 0
+    ticks0 = frontend.ticks
+    while True:
+        now = clock.now() - t0
+        while i < len(order) and order[i][0] <= now + 1e-12:
+            t_arr, q = order[i]
+            frontend.submit(q, at=t0 + t_arr)
+            i += 1
+        if frontend.pending_count() == 0:
+            if i >= len(order):
+                break
+            clock.wait_until(t0 + order[i][0])
+            continue
+        completed.extend(frontend.tick())
+        if frontend.ticks - ticks0 >= max_ticks:
+            break
+    return TraceReport(
+        completed=completed,
+        ticks=frontend.ticks - ticks0,
+        span_seconds=clock.now() - t0,
+    )

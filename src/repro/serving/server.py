@@ -10,7 +10,6 @@ slot's cache via dynamic_update along the batch axis.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -20,6 +19,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.graph_frontend import Clock
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
@@ -36,11 +36,22 @@ class Request:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, slots: int = 4, max_len: int = 256):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        slots: int = 4,
+        max_len: int = 256,
+        clock: Optional[Clock] = None,
+    ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # injected monotonic clock: latency fields used to come from
+        # time.time(), which NTP steps can move backwards mid-request;
+        # perf_counter (via Clock) cannot, and tests inject a FakeClock
+        self.clock = clock or Clock()
         self.state = T.init_cache(cfg, slots, max_len)
         self.active: List[Optional[Request]] = [None] * slots
         self.pending: Deque[Request] = deque()
@@ -50,7 +61,7 @@ class Engine:
         self.last_tok = np.zeros((slots, 1), dtype=np.int32)
 
     def submit(self, req: Request):
-        req.t_submit = time.time()
+        req.t_submit = self.clock.now()
         self.pending.append(req)
 
     def _admit(self):
@@ -62,7 +73,7 @@ class Engine:
                 logits, st1 = self._prefill(self.params, batch)
                 tok = int(jnp.argmax(logits[0]))
                 req.out.append(tok)
-                req.t_first = time.time()
+                req.t_first = self.clock.now()
                 self.last_tok[s, 0] = tok
                 self.slot_pos[s] = len(req.prompt)
                 self.state = _splice_slot(self.state, st1, s)
@@ -88,7 +99,7 @@ class Engine:
                 req.eos_id is not None and tok == req.eos_id
             )
             if done:
-                req.t_done = time.time()
+                req.t_done = self.clock.now()
                 self.active[s] = None
         return sum(a is not None for a in self.active)
 

@@ -1,0 +1,367 @@
+"""Multi-tenant graph-query serving tests (DESIGN.md §12).
+
+Four contracts, all FakeClock-driven with zero wall-clock sleeps:
+
+  1. PPR correctness — the serving PPR kernel matches a float64 numpy
+     oracle on every smoke graph under every batchable reduce method.
+  2. Coalescing equivalence — N queries served through max_batch=1 and
+     the same N coalesced into batched ticks produce bit-identical
+     per-query answers (batching is a latency trade, never numerics).
+  3. Fairness — round-robin admission: a flooding tenant cannot starve
+     a small one, and the tick schedule is exactly predictable.
+  4. Warm-cache invariant — after ``warmup`` with autotune on, serving
+     a seeded trace issues ZERO autotune cache writes (every decide is
+     a cache hit; no request pays measurement).
+
+Plus determinism of ``poisson_trace``/``replay_trace`` and the
+nearest-rank percentile the latency assertions rely on.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PBExecutor,
+    bfs,
+    build_csr,
+    graph_suite,
+    personalized_pagerank,
+    personalized_pagerank_oracle,
+    sssp,
+)
+from repro.serving.graph_frontend import (
+    FakeClock,
+    GraphFrontend,
+    GraphQuery,
+    latency_stats,
+    percentile,
+    poisson_trace,
+    replay_trace,
+)
+
+SUITE = graph_suite("smoke")
+
+
+@pytest.fixture(scope="module")
+def ex(tmp_path_factory):
+    # isolated autotune cache: decisions in these tests never depend on
+    # whatever a previous benchmark run measured on this machine
+    return PBExecutor(cache_dir=str(tmp_path_factory.mktemp("pbcache")))
+
+
+# ---------------------------------------------------------------------------
+# 1. PPR oracle: every graph x every batchable reduce method.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["auto", "sort", "counting", "fused"])
+@pytest.mark.parametrize("name", sorted(SUITE))
+def test_ppr_matches_float64_oracle(name, method, ex):
+    csr = build_csr(SUITE[name])
+    source = int(np.argmax(np.diff(np.asarray(csr.offsets))))  # hub vertex
+    got = personalized_pagerank(csr, source, iters=10, executor=ex, method=method)
+    want = personalized_pagerank_oracle(csr, source, iters=10)
+    np.testing.assert_allclose(np.asarray(got.ranks), want, atol=1e-5)
+    # restart mass really is personalized: the source holds at least the
+    # (1 - damp) teleport share, and total mass stays <= 1 (dangling
+    # vertices drop mass, never create it)
+    r = np.asarray(got.ranks)
+    assert r[source] >= 0.15 - 1e-6
+    assert r.sum() <= 1.0 + 1e-5
+
+
+def test_ppr_batched_lanes_bitexact_vs_single(ex):
+    """One (m, B) value block on the shared index stream computes, per
+    lane, bit-for-bit what the single-source call computes — the PPR leg
+    of the coalescing contract."""
+    csr = build_csr(SUITE["KRON"])
+    srcs = [3, 11, 29, 200]
+    batched = personalized_pagerank(csr, srcs, iters=8, executor=ex, method="fused")
+    rows = np.asarray(batched.ranks)
+    assert rows.shape == (len(srcs), csr.num_nodes)
+    for i, s in enumerate(srcs):
+        single = personalized_pagerank(csr, s, iters=8, executor=ex, method="fused")
+        np.testing.assert_array_equal(rows[i], np.asarray(single.ranks))
+
+
+# ---------------------------------------------------------------------------
+# 2. Coalescing equivalence through the frontend.
+# ---------------------------------------------------------------------------
+
+
+def _mixed_queries():
+    """A fixed multi-tenant, multi-kind workload on one graph."""
+    qs = []
+    for i, s in enumerate([1, 5, 9, 33, 57, 101]):
+        qs.append(GraphQuery(tenant=f"t{i % 2}", graph="G", kind="bfs", source=s))
+    for i, s in enumerate([2, 6, 10, 34]):
+        qs.append(GraphQuery(tenant=f"t{i % 2}", graph="G", kind="sssp", source=s))
+    for i, s in enumerate([3, 7, 11]):
+        qs.append(
+            GraphQuery(tenant=f"t{i % 3}", graph="G", kind="ppr", source=s, iters=6)
+        )
+    qs.append(GraphQuery(tenant="t0", graph="G", kind="pagerank", iters=6))
+    qs.append(GraphQuery(tenant="t1", graph="G", kind="pagerank", iters=6))
+    qs.append(GraphQuery(tenant="t2", graph="G", kind="kcore", k=2))
+    return qs
+
+
+def _serve(max_batch, ex):
+    fe = GraphFrontend(executor=ex, max_batch=max_batch, clock=FakeClock())
+    fe.register_graph("G", SUITE["KRON"], seed=0)
+    for q in _mixed_queries():
+        fe.submit(q, at=0.0)
+    done = fe.run_until_drained()
+    assert fe.pending_count() == 0
+    key = lambda q: (q.tenant, q.kind, q.source, q.iters, q.k)
+    return fe, {key(q): q.result for q in done}
+
+
+def test_coalesced_ticks_equal_individual_queries(ex):
+    fe1, singles = _serve(1, ex)
+    fe4, batched = _serve(4, ex)
+    assert singles.keys() == batched.keys()
+    for k in singles:
+        np.testing.assert_array_equal(singles[k], batched[k], err_msg=str(k))
+    # coalescing actually happened: fewer ticks, same answers
+    assert fe4.ticks < fe1.ticks
+    assert max(rec["batch"] for rec in fe4.tick_log) > 1
+
+
+def test_frontend_inverts_the_preprocess_relabeling(ex):
+    """Tenants speak ORIGINAL vertex ids: a frontend query on the
+    reordered graph must equal the plain single-source kernels run on
+    the un-reordered CSR."""
+    coo = SUITE["DBP"]
+    fe = GraphFrontend(executor=ex, max_batch=2, clock=FakeClock())
+    g = fe.register_graph("G", coo, seed=7)
+    fe.submit(GraphQuery(tenant="a", graph="G", kind="bfs", source=17))
+    fe.submit(GraphQuery(tenant="a", graph="G", kind="sssp", source=17))
+    done = {q.kind: q for q in fe.run_until_drained()}
+
+    plain = build_csr(coo)
+    want_bfs = np.asarray(bfs(plain, 17, executor=ex).dist)
+    np.testing.assert_array_equal(done["bfs"].result, want_bfs)
+    # sssp weights live per-edge of the REBUILT csr, so compare through
+    # the relabeling: dist[original v] == reordered dist[new_ids[v]]
+    r = sssp(g.csr, g.weights, int(g.new_ids[17]), executor=ex)
+    np.testing.assert_array_equal(
+        done["sssp"].result, np.asarray(r.dist)[g.new_ids]
+    )
+
+
+def test_global_kinds_are_memoized_and_shared(ex):
+    fe = GraphFrontend(executor=ex, max_batch=2, clock=FakeClock())
+    fe.register_graph("G", SUITE["EURO"], seed=0)
+    for t in ("a", "b", "a"):
+        fe.submit(GraphQuery(tenant=t, graph="G", kind="pagerank", iters=5))
+    done = fe.run_until_drained()
+    assert len(done) == 3
+    r0 = done[0].result
+    assert all(q.result is r0 for q in done)  # one computation, shared
+    # second tick (if any) hit the memo
+    memo_ticks = [rec for rec in fe.tick_log if rec.get("memo")]
+    full_ticks = [rec for rec in fe.tick_log if rec.get("memo") is False]
+    assert len(full_ticks) == 1
+    assert all(rec["edges"] == 0 for rec in memo_ticks)
+
+
+def test_submit_validates_queries(ex):
+    fe = GraphFrontend(executor=ex, max_batch=2, clock=FakeClock())
+    fe.register_graph("G", SUITE["EURO"], seed=0)
+    n = SUITE["EURO"].num_nodes
+    with pytest.raises(ValueError, match="unknown graph"):
+        fe.submit(GraphQuery(tenant="a", graph="nope", kind="bfs"))
+    with pytest.raises(ValueError, match="unknown kind"):
+        fe.submit(GraphQuery(tenant="a", graph="G", kind="dfs"))
+    with pytest.raises(ValueError, match="source"):
+        fe.submit(GraphQuery(tenant="a", graph="G", kind="bfs", source=n))
+    with pytest.raises(ValueError, match="iters"):
+        fe.submit(GraphQuery(tenant="a", graph="G", kind="ppr", iters=0))
+    with pytest.raises(ValueError, match="already registered"):
+        fe.register_graph("G", SUITE["EURO"])
+
+
+# ---------------------------------------------------------------------------
+# 3. Fairness: round-robin admission under a flooding tenant.
+# ---------------------------------------------------------------------------
+
+
+def test_flooding_tenant_cannot_starve_a_small_one(ex):
+    """tick_cost=1.0 on a FakeClock makes t_done the tick index: the
+    whole admission schedule is asserted exactly."""
+    fe = GraphFrontend(
+        executor=ex, max_batch=4, clock=FakeClock(), tick_cost=1.0
+    )
+    fe.register_graph("G", SUITE["EURO"], seed=0)
+    for i in range(16):
+        fe.submit(
+            GraphQuery(tenant="flood", graph="G", kind="bfs", source=i), at=0.0
+        )
+    for i in range(4):
+        fe.submit(
+            GraphQuery(tenant="small", graph="G", kind="bfs", source=100 + i),
+            at=0.0,
+        )
+    done = fe.run_until_drained()
+    assert len(done) == 20 and fe.ticks == 5
+    small = [q for q in done if q.tenant == "small"]
+    flood = [q for q in done if q.tenant == "flood"]
+    # round-robin splits every full batch 2/2: the small tenant drains
+    # in the first two ticks even though 16 flood queries arrived first
+    assert max(q.t_done for q in small) == 2.0
+    assert max(q.t_done for q in flood) == 5.0
+    # every early tick served both tenants (no winner-takes-the-batch)
+    for rec in fe.tick_log[:2]:
+        assert rec["batch"] == 4
+    assert latency_stats(small)["max"] <= latency_stats(flood)["max"]
+
+
+def test_oldest_head_bounds_staleness_across_groups(ex):
+    """Group choice follows the globally oldest queue head, so a query
+    whose group went quiet is served next tick, not last."""
+    fe = GraphFrontend(
+        executor=ex, max_batch=4, clock=FakeClock(), tick_cost=1.0
+    )
+    fe.register_graph("G", SUITE["EURO"], seed=0)
+    fe.submit(GraphQuery(tenant="a", graph="G", kind="sssp", source=3), at=0.0)
+    for i in range(8):
+        fe.submit(
+            GraphQuery(tenant="b", graph="G", kind="bfs", source=i), at=0.0
+        )
+    done = fe.run_until_drained()
+    # the lone sssp head is globally oldest -> tick 0 serves it alone;
+    # the bfs flood coalesces afterwards
+    assert fe.tick_log[0]["kind"] == "sssp" and fe.tick_log[0]["batch"] == 1
+    assert [r["kind"] for r in fe.tick_log[1:]] == ["bfs", "bfs"]
+    assert len(done) == 9
+
+
+# ---------------------------------------------------------------------------
+# 4. Warm-cache invariant: zero autotune writes after warmup.
+# ---------------------------------------------------------------------------
+
+
+def _trace_query(rng, i):
+    kinds = ("bfs", "sssp", "ppr", "pagerank", "kcore")
+    kind = kinds[i % len(kinds)]
+    return GraphQuery(
+        tenant=f"t{i % 3}",
+        graph="G",
+        kind=kind,
+        source=int(rng.integers(0, 1024)),
+        iters=4,
+        k=2,
+    )
+
+
+def test_warmup_covers_every_serving_decide(tmp_path, monkeypatch):
+    """With autotune ON, all measurement happens inside ``warmup`` —
+    replaying a mixed-kind trace afterwards issues ZERO cache writes
+    (every decide hits the warmed cache, so no request pays tuning)."""
+    ex = PBExecutor(autotune=True, cache_dir=str(tmp_path))
+    # keep the decide/put machinery real but skip wall-clock timing of
+    # every candidate method (minutes); the invariant under test is the
+    # cache-key coverage, not the measured winner
+    monkeypatch.setattr(
+        PBExecutor,
+        "measure_methods",
+        lambda self, *a, **k: {"method": "sort", "timings_us": {}},
+    )
+    fe = GraphFrontend(executor=ex, max_batch=4, clock=FakeClock())
+    fe.register_graph("G", SUITE["DBP"], seed=0)
+    rep = fe.warmup(probe=False)
+    assert rep.decisions > 0 and rep.cache_writes > 0
+
+    puts = []
+    orig_put = ex.cache.put
+    monkeypatch.setattr(
+        ex.cache, "put", lambda key, entry: (puts.append(key), orig_put(key, entry))
+    )
+    trace = poisson_trace(100.0, 20, _trace_query, seed=3)
+    report = replay_trace(fe, trace)
+    assert len(report.completed) == 20
+    assert puts == [], f"serving wrote autotune entries post-warmup: {puts}"
+
+
+def test_warm_report_counts_probes(ex):
+    fe = GraphFrontend(executor=ex, max_batch=4, clock=FakeClock())
+    fe.register_graph("G", SUITE["EURO"], seed=0)
+    rep = fe.warmup(probe=True)
+    # 3 kernels x lane widths {1, 2, 4}
+    assert rep.probes == 9
+    assert rep.decisions > 0
+    assert fe.warm_report is rep
+
+
+# ---------------------------------------------------------------------------
+# Deterministic traces + the percentile the latency assertions use.
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_is_nearest_rank():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert percentile(xs, 50.0) == 3.0
+    assert percentile(xs, 99.0) == 5.0
+    assert percentile(xs, 0.0) == 1.0
+    assert percentile([7.0], 50.0) == 7.0
+    assert np.isnan(percentile([], 50.0))
+    # always an element of xs — never an interpolated value
+    assert percentile(xs, 37.0) in xs
+    s = latency_stats([])
+    assert s["count"] == 0 and np.isnan(s["mean"])
+
+
+def test_poisson_trace_is_seeded_and_sorted():
+    mk = lambda rng, i: GraphQuery(tenant="t", graph="G", kind="bfs", source=i)
+    a = poisson_trace(50.0, 30, mk, seed=9)
+    b = poisson_trace(50.0, 30, mk, seed=9)
+    assert [t for t, _ in a] == [t for t, _ in b]
+    assert all(t1 <= t2 for (t1, _), (t2, _) in zip(a, a[1:]))
+    c = poisson_trace(50.0, 30, mk, seed=10)
+    assert [t for t, _ in a] != [t for t, _ in c]
+    with pytest.raises(ValueError):
+        poisson_trace(0.0, 1, mk)
+
+
+def _replay_once(ex):
+    fe = GraphFrontend(
+        executor=ex, max_batch=4, clock=FakeClock(), tick_cost=0.01
+    )
+    fe.register_graph("G", SUITE["DBP"], seed=0)
+    fe.warmup(probe=False)
+    trace = poisson_trace(200.0, 24, _trace_query, seed=11)
+    return fe, replay_trace(fe, trace)
+
+
+def test_replay_is_bit_for_bit_deterministic(ex):
+    """Same trace + same config -> identical ticks, batches, latencies
+    and percentile stats, with zero wall-clock sleeps (FakeClock)."""
+    fe_a, rep_a = _replay_once(ex)
+    fe_b, rep_b = _replay_once(ex)
+    assert rep_a.ticks == rep_b.ticks
+    assert rep_a.span_seconds == rep_b.span_seconds
+    assert fe_a.tick_log == fe_b.tick_log
+    lat_a = sorted(q.latency for q in rep_a.completed)
+    lat_b = sorted(q.latency for q in rep_b.completed)
+    assert lat_a == lat_b  # bit-for-bit, not allclose
+    assert rep_a.stats() == rep_b.stats()
+    for t in rep_a.tenants():
+        assert rep_a.stats(t) == rep_b.stats(t)
+    # open-loop latency accounting: everyone waited at least one tick
+    assert all(q.latency >= fe_a.tick_cost - 1e-9 for q in rep_a.completed)
+    assert rep_a.throughput_qps > 0
+
+
+@pytest.mark.slow
+def test_sustained_load_on_the_real_clock(ex):
+    """The benchmark path: replay against a real perf_counter clock at a
+    rate past saturation; everything completes with sane latencies."""
+    fe = GraphFrontend(executor=ex, max_batch=8)
+    fe.register_graph("G", SUITE["DBP"], seed=0)
+    fe.warmup(probe=True)
+    trace = poisson_trace(500.0, 64, _trace_query, seed=5)
+    rep = replay_trace(fe, trace)
+    assert len(rep.completed) == 64
+    assert all(q.latency > 0 and q.wait >= 0 for q in rep.completed)
+    s = rep.stats()
+    assert s["p50"] <= s["p99"] <= s["max"]

@@ -7,7 +7,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import COO, CobraPlan
+from repro.core import COO, CobraPlan, get_default_executor
 from repro.core import pb as pb_core
 from repro.core.cobra import hierarchical_binning
 from repro.core.neighbor_populate import build_csr_oracle, build_csr_pb
@@ -105,6 +105,53 @@ def test_pb_scatter_add_equals_baseline(idx, seed):
     c = pb_scatter_add(idx, upd, 64, coalesce=False)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
     np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-5)
+
+
+@SET
+@given(
+    idx=st.lists(st.integers(0, 63), min_size=1, max_size=200),
+    op=st.sampled_from(["add", "min", "max"]),
+    method=st.sampled_from(["sort", "counting", "fused"]),
+    seed=st.integers(0, 100),
+)
+def test_reduce_stream_parity_across_ops_and_methods(idx, op, method, seed):
+    """Executor reduce == the dense scatter oracle for every (op, method)
+    pair serving exercises — int32 values, so equality is exact and any
+    ordering bug in the min/max identity handling surfaces bit-for-bit."""
+    ex = get_default_executor()
+    idx = jnp.asarray(idx, jnp.int32)
+    val = jnp.asarray(
+        np.random.default_rng(seed).integers(-50, 50, idx.shape[0]), jnp.int32
+    )
+    got = ex.reduce_stream(idx, val, out_size=64, op=op, method=method)
+    want = ref.scatter_reduce_ref(idx, val, 64, op=op)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@SET
+@given(
+    b=st.integers(1, 4),
+    m=st.integers(1, 48),
+    op=st.sampled_from(["add", "min", "max"]),
+    method=st.sampled_from(["sort", "counting", "fused"]),
+    seed=st.integers(0, 100),
+)
+def test_reduce_streams_batched_equals_per_lane_loop(b, m, op, method, seed):
+    """The (B, m) batched reduce (one decision, one vmapped program — the
+    serving coalescing primitive) computes per lane exactly what B
+    independent single-stream reduces compute."""
+    ex = get_default_executor()
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 32, (b, m)), jnp.int32)
+    val = jnp.asarray(rng.integers(-9, 9, (b, m)), jnp.int32)
+    got = ex.reduce_streams(idx, val, out_size=32, op=op, method=method)
+    want = jnp.stack(
+        [
+            ex.reduce_stream(idx[q], val[q], out_size=32, op=op, method=method)
+            for q in range(b)
+        ]
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 @SET

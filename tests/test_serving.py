@@ -54,6 +54,32 @@ def test_engine_greedy_matches_manual_decode(setup):
     assert done[0].out == ref, (done[0].out, ref)
 
 
+def test_engine_latency_fields_come_from_injected_clock(setup):
+    """Regression: Request latency fields used to be stamped with
+    ``time.time()``, which NTP steps can move backwards mid-request
+    (negative latencies). The Engine now routes every timestamp through
+    an injected monotonic Clock — a FakeClock proves it end to end."""
+    from repro.serving.graph_frontend import FakeClock
+
+    cfg, params = setup
+    clk = FakeClock(start=100.0)
+    eng = Engine(cfg, params, slots=1, max_len=64, clock=clk)
+    eng.submit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32), max_new=4))
+    clk.advance(5.0)
+    (r,) = eng.run_until_drained()
+    assert r.t_submit == 100.0
+    assert r.t_first == 105.0 and r.t_done == 105.0
+    assert r.t_done - r.t_submit == 5.0
+
+
+def test_engine_default_clock_is_monotonic(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=1, max_len=64)
+    a = eng.clock.now()
+    b = eng.clock.now()
+    assert b >= a
+
+
 def test_engine_two_slots_do_not_interfere(setup):
     """Same request served alone vs alongside another must match (slot
     isolation of caches)."""
