@@ -18,8 +18,23 @@ Two legs (DESIGN.md §9):
     overhead trend, not real-speedup — the modeled column is the
     hardware claim (DESIGN.md §6's measured-vs-modeled split).
 
+A third leg covers the chunked exchange pipeline (DESIGN.md §13):
+
+  * **overlap (modeled)** — ``ShardedPBStreamRoofline``'s overlap model
+    per bench graph at paper scale: hidden-exchange fraction and overlap
+    efficiency at K=4, and the model's best K under per-chunk launch
+    overhead (``fig7/overlap/<graph>``).
+  * **chunk sweep (measured)** — ``shard_reduce_stream`` at K ∈ {1,2,4}
+    on the forced 8-device mesh, reporting measured overlap efficiency
+    (t_K1 / t_K), the chosen capacity, and the modeled hidden fraction
+    next to it (``fig7/chunks/k<K>``; ``fig7/chunks/auto`` is the
+    decision-driven K). Host-device emulation shares one core, so the
+    measured column shows schedule overhead, not real overlap — the
+    modeled column is the hardware claim.
+
 Rows: ``fig7/modeled_hbm/<graph>``, ``fig7/modeled_ici/<graph>``,
-``fig7/strong/d<k>``, ``fig7/weak/d<k>``.
+``fig7/overlap/<graph>``, ``fig7/strong/d<k>``, ``fig7/weak/d<k>``,
+``fig7/chunks/k<K>``, ``fig7/chunks/auto``.
 """
 from __future__ import annotations
 
@@ -61,6 +76,15 @@ def _modeled_rows(rows: Rows) -> None:
             f"d=8 ici_MB={rl.ici_bytes_per_device/1e6:.0f} "
             f"bottleneck={rl.bottleneck} "
             f"speedup_ceiling={rl.speedup_ceiling:.2f}x",
+        )
+        rows.add(
+            f"fig7/overlap/{name}",
+            0.0,
+            f"d=8 K=4 hidden_frac={rl.hidden_exchange_fraction(4):.3f} "
+            f"overlap_eff={rl.overlap_efficiency(4):.3f} "
+            f"best_K={rl.best_pipeline_chunks()} "
+            f"t_seq_us={rl.t_sequential*1e6:.1f} "
+            f"t_pipe4_us={rl.t_pipelined(4)*1e6:.1f}",
         )
 
 
@@ -109,6 +133,44 @@ def _child_main() -> None:
             f"ROW,fig7/weak/d{k},{t*1e6:.1f},"
             f"m/dev={base_m} n/dev={base_n} efficiency={t1/t:.2f}"
         )
+
+    # chunk sweep (DESIGN.md §13): measured overlap efficiency at
+    # K ∈ {1, 2, 4} on the full 8-device mesh, modeled hidden-exchange
+    # fraction next to it, and the chosen (estimated) capacity from the
+    # decision log — the fig7 record of satellite capacity estimation
+    from repro.roofline import ShardedPBStreamRoofline
+
+    n, m = base_n * 8, base_m * 8
+    idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    val = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    mesh = make_stream_mesh(8)
+    rl = ShardedPBStreamRoofline(m, n, n_dev=8)
+    tk1 = None
+    for K in (1, 2, 4):
+        t = time_fn(
+            lambda: ex.shard_reduce_stream(
+                idx, val, out_size=n, mesh=mesh, op="add", pipeline_chunks=K
+            )
+        )
+        tk1 = t if tk1 is None else tk1
+        last = ex.decision_log[-1]
+        print(
+            f"ROW,fig7/chunks/k{K},{t*1e6:.1f},"
+            f"measured_overlap_eff={tk1/t:.2f} "
+            f"modeled_hidden_frac={rl.hidden_exchange_fraction(K):.3f} "
+            f"capacity={last.get('capacity')} "
+            f"overflow={last.get('overflow')} packed={last.get('packed')}"
+        )
+    # decision-driven K (the executor's pipeline_chunks axis)
+    t = time_fn(
+        lambda: ex.shard_reduce_stream(idx, val, out_size=n, mesh=mesh, op="add")
+    )
+    last = ex.decision_log[-1]
+    print(
+        f"ROW,fig7/chunks/auto,{t*1e6:.1f},"
+        f"K={last.get('pipeline_chunks')} model_best_K={rl.best_pipeline_chunks()} "
+        f"capacity={last.get('capacity')} source={last.get('capacity_source')}"
+    )
 
 
 def run() -> Rows:

@@ -30,6 +30,10 @@ REQUIRED_PREFIXES = (
     "fig2b/",
     "fig6/",
     "fig7/",
+    # the §13 pipeline rows ride fig7 but get their own floor so the
+    # chunk sweep / overlap model can't silently vanish from smoke
+    "fig7/overlap/",
+    "fig7/chunks/",
     "fig8/",
     "serving/",
     "executor/",

@@ -115,24 +115,19 @@ def connected_components_fused(
 @functools.lru_cache(maxsize=32)
 def _cc_sharded_fn(
     mesh, axis, num_nodes, n_dev, r, max_iters, method, block, capacity,
-    bin_range=None, plan=None,
+    chunks=1, bin_range=None, plan=None,
 ):
     from repro.compat import shard_map
-    from repro.core.distributed_pb import clamp_for_local_reduce, owner_exchange
-    from repro.core.executor import execute_reduce
+    from repro.core.distributed_pb import pipelined_owner_reduce
     from jax.sharding import PartitionSpec as P
 
     n = num_nodes
 
     def reduce_owned(key_l, val_l):
-        local_idx, local_val = owner_exchange(
+        return pipelined_owner_reduce(
             key_l, val_l, out_size=n, shard_range=r, n_dev=n_dev,
-            axis_name=axis, capacity=capacity, block=block,
-            fill_val=jnp.iinfo(jnp.int32).max,
-        )
-        return execute_reduce(
-            clamp_for_local_reduce(local_idx, r), local_val, out_size=r,
-            op="min", method=method, bin_range=bin_range, plan=plan, block=block,
+            axis_name=axis, capacity=capacity, chunks=chunks, op="min",
+            method=method, bin_range=bin_range, plan=plan, block=block,
         )
 
     def f(src_l, dst_l):
@@ -143,26 +138,31 @@ def _cc_sharded_fn(
         safe_dst = jnp.minimum(dst_l, n - 1)
 
         def cond(state):
-            labels, prev, it = state
+            labels, prev, it, _ = state
             return jnp.logical_and(jnp.any(labels != prev), it < max_iters)
 
         def body(state):
-            labels, _, it = state
-            owned = jnp.minimum(
-                reduce_owned(dst_l, jnp.take(labels, safe_src)),
-                reduce_owned(src_l, jnp.take(labels, safe_dst)),
-            )
+            labels, _, it, of = state
+            owned_d, of_d = reduce_owned(dst_l, jnp.take(labels, safe_src))
+            owned_s, of_s = reduce_owned(src_l, jnp.take(labels, safe_dst))
+            owned = jnp.minimum(owned_d, owned_s)
             gathered = jax.lax.all_gather(owned, axis, tiled=True)
-            return jnp.minimum(labels, gathered[:n]), labels, it + 1
+            return (
+                jnp.minimum(labels, gathered[:n]), labels, it + 1,
+                of | of_d | of_s,
+            )
 
-        init = (labels0, jnp.full_like(labels0, -1), jnp.int32(0))
-        labels, _, it = jax.lax.while_loop(cond, body, init)
-        return labels, it
+        init = (
+            labels0, jnp.full_like(labels0, -1), jnp.int32(0),
+            jnp.asarray(False),
+        )
+        labels, _, it, of = jax.lax.while_loop(cond, body, init)
+        return labels, it, of
 
     spec = P(axis)
     return jax.jit(
         shard_map(
-            f, mesh=mesh, in_specs=(spec, spec), out_specs=(P(None), P()),
+            f, mesh=mesh, in_specs=(spec, spec), out_specs=(P(None), P(), P()),
             check_vma=False,
         )
     )
@@ -175,17 +175,22 @@ def connected_components_sharded(
     axis_name: str | None = None,
     method: str | None = None,
     capacity: int | None = None,
+    pipeline_chunks: int | None = None,
 ) -> CCResult:
     """Label propagation with the mesh-sharded PB reduction (DESIGN.md
-    §9): edges sharded across devices; per iteration, min-labels are
-    owner-routed over the interconnect in both edge directions, reduced
-    into the owned label slice, and all_gathered back. min is exact in
-    int32, so the result (and iteration count) equals the single-device
-    ``connected_components`` bit-for-bit. ``mesh=None``/1 device
-    degrades to ``connected_components_fused``. ``method=None``/"auto"
-    asks ``decide`` at the per-device shape (topology-keyed) — the
-    device-local method is never hardcoded.
+    §9, §13): edges sharded across devices; per iteration, min-labels
+    are owner-routed over the interconnect in both edge directions (each
+    in ``pipeline_chunks`` double-buffered pieces), reduced into the
+    owned label slice, and all_gathered back. min is exact in int32 and
+    order-independent across chunks, so the result (and iteration count)
+    equals the single-device ``connected_components`` bit-for-bit at any
+    K. ``mesh=None``/1 device degrades to
+    ``connected_components_fused``. ``method=None``/"auto" asks
+    ``decide`` at the per-device shape (topology-keyed) — the
+    device-local method is never hardcoded. ``capacity=None`` estimates
+    from owner skew over BOTH edge directions, overflow-guarded.
     """
+    from repro.core import distributed_pb as dpb
     from repro.core.distributed_pb import (
         _pad_to_multiple,
         resolve_stream_axis,
@@ -201,18 +206,41 @@ def connected_components_sharded(
     ex = get_default_executor()
     n, m = coo.num_nodes, coo.num_edges
     r = shard_range_for(n, n_dev)
-    cap = capacity if capacity is not None else -(-max(m, 1) // n_dev)
+    m_local = -(-max(m, 1) // n_dev)
+    cap_total = (
+        int(capacity)
+        if capacity is not None
+        else max(
+            dpb.estimate_capacity(coo.dst, out_size=n, n_dev=n_dev),
+            dpb.estimate_capacity(coo.src, out_size=n, n_dev=n_dev),
+        )
+    )
     d = ex.decide_or_forced(
-        method, r, n_dev * cap, jnp.int32, kind="reduce", op="min",
+        method, r, n_dev * cap_total, jnp.int32, kind="reduce", op="min",
         mesh_shape=tuple(sorted(mesh.shape.items())),
     )
+    entry = ex._last_entry if method in (None, "auto") else None
+    k = pipeline_chunks if pipeline_chunks is not None else d.pipeline_chunks
+    k, chunk_len = dpb._chunk_layout(m_local, k)
+    cap = max(1, min(chunk_len, -(-cap_total // k)))
     src_p = _pad_to_multiple(coo.src, n_dev, n)
     dst_p = _pad_to_multiple(coo.dst, n_dev, n)
     fn = _cc_sharded_fn(
-        mesh, axis, n, n_dev, r, max_iters, d.method, ex.block, cap,
+        mesh, axis, n, n_dev, r, max_iters, d.method, ex.block, cap, k,
         d.bin_range, d.plan,
     )
-    labels, it = fn(src_p, dst_p)
+    labels, it, overflow = fn(src_p, dst_p)
+    if cap < chunk_len and bool(overflow):
+        # estimated capacity lost tuples: rerun at the always-safe
+        # per-chunk capacity (surfaced on the decision entry)
+        fn = _cc_sharded_fn(
+            mesh, axis, n, n_dev, r, max_iters, d.method, ex.block,
+            chunk_len, k, d.bin_range, d.plan,
+        )
+        labels, it, _ = fn(src_p, dst_p)
+        if entry is not None:
+            entry.update(overflow=True, capacity=chunk_len,
+                         capacity_source="overflow-fallback")
     return CCResult(labels, it)
 
 

@@ -14,21 +14,39 @@ runs, per device of a 1-D mesh:
      (``pb.counting_permutation``), so in-shard stream order survives;
   2. **capacity-padded all_to_all** — per-destination segments are
      padded to a fixed capacity (static shapes; ragged exchange is not
-     expressible in XLA) and exchanged in one collective. Padding slots
+     expressible in XLA) and exchanged in one collective: index and
+     value ride a single packed buffer when the value dtype permits
+     (``_PACK_ITEMSIZE``), halving collective launches. Padding slots
      carry the sentinel index ``out_size`` and the op identity, so they
-     are dropped by construction downstream;
+     are dropped by construction downstream. A per-destination segment
+     that exceeds ``capacity`` raises an **overflow flag** (returned,
+     never silent) so callers can rerun at the always-safe capacity;
   3. **device-local fused reduce** — the received stream, now entirely
      owned by this device's index range, runs through the existing
      single-sweep bin-and-accumulate (``execute_reduce``, DESIGN.md §8)
      over the ``shard_range``-sized local domain. Every finer C-Buffer
      level stays device-local, exactly as on one chip.
 
+**Pipelining (DESIGN.md §13):** the three stages above used to run
+strictly in sequence — ICI idle during the local reduce, HBM idle while
+the exchange drains. ``pipelined_owner_reduce`` chunks each device's
+local stream into K statically-unrolled pieces and issues chunk *i+1*'s
+``all_to_all`` before reducing chunk *i*'s received tuples, so XLA can
+schedule the collective-start of the next chunk behind the current
+chunk's bin-and-accumulate (double buffering: two chunk-sized recv
+buffers live at once). K comes from the executor's decision
+(``BinningDecision.pipeline_chunks``) — the roofline overlap model or a
+measured sweep — and K=1 degrades to the exact monolithic schedule.
+
 Stability across the shard boundary: ``all_to_all`` concatenates
 received segments in source-device order, source devices hold contiguous
 chunks of the global stream, and the local partition is stable — so the
-tuples a device receives arrive in global stream order. Non-commutative
-consumers (``shard_build_csr``) therefore reproduce the single-device
-stable binning semantics exactly.
+tuples a device receives arrive in global stream order. Chunking
+preserves this: received chunk buffers are stacked ``(K, n_dev, cap)``
+and transposed to ``(n_dev, K, cap)`` before flattening, which restores
+source-major (= global stream) order across chunk boundaries.
+Non-commutative consumers (``shard_build_csr``) therefore reproduce the
+single-device stable binning semantics exactly at any K.
 
 With one device (or ``mesh=None``) every entry point falls back to the
 single-device path unchanged — bit-stable with ``execute_reduce``.
@@ -52,6 +70,11 @@ from repro.core.graph import COO, CSR, offsets_from_degrees
 # Default mesh axis name for stream sharding. One logical axis: the
 # device level of the hierarchy is 1-D (a tuple has ONE owner device).
 STREAM_AXIS = "shard"
+
+# Value dtypes whose itemsize lets an int32 index bitcast into one extra
+# value lane — the packed single-collective exchange. Wider/narrower
+# value dtypes fall back to the two-collective path.
+_PACK_ITEMSIZE = 4
 
 
 def make_stream_mesh(num_devices: Optional[int] = None, axis_name: str = STREAM_AXIS) -> Mesh:
@@ -87,12 +110,45 @@ def shard_range_for(out_size: int, n_dev: int) -> int:
     return max(1, -(-out_size // n_dev))
 
 
+def can_pack(val_dtype) -> bool:
+    """True when an int32 index can ride the value buffer (bitcast into
+    one extra 4-byte lane) — the single-collective exchange."""
+    return jnp.dtype(val_dtype).itemsize == _PACK_ITEMSIZE
+
+
 def _pad_to_multiple(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
     padn = (-x.shape[0]) % mult
     if padn == 0:
         return x
     width = [(0, padn)] + [(0, 0)] * (x.ndim - 1)
     return jnp.pad(x, width, constant_values=fill)
+
+
+def _exchange_buffers(
+    send_idx: jnp.ndarray, send_val: jnp.ndarray, axis_name: str, packed: bool
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """all_to_all the (n_dev, capacity[, ...]) send buffers.
+
+    ``packed`` (and a 4-byte value dtype) bitcasts the int32 index into
+    one extra value lane so index+value ride ONE collective — half the
+    launches of the two-collective path, bit-identical results (the
+    bitcast round-trips every i32 pattern; NaN payloads are never
+    interpreted as floats)."""
+    if packed and can_pack(send_val.dtype):
+        idx_as_val = jax.lax.bitcast_convert_type(
+            send_idx.astype(jnp.int32), send_val.dtype
+        )
+        if send_val.ndim == 2:  # scalar values: (n_dev, cap) -> lanes
+            buf = jnp.stack([send_val, idx_as_val], axis=-1)
+        else:  # row values: (n_dev, cap, D) -> one extra column
+            buf = jnp.concatenate([send_val, idx_as_val[..., None]], axis=-1)
+        recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0)
+        recv_idx = jax.lax.bitcast_convert_type(recv[..., -1], jnp.int32)
+        recv_val = recv[..., 0] if send_val.ndim == 2 else recv[..., :-1]
+        return recv_idx, recv_val
+    recv_idx = jax.lax.all_to_all(send_idx, axis_name, split_axis=0, concat_axis=0)
+    recv_val = jax.lax.all_to_all(send_val, axis_name, split_axis=0, concat_axis=0)
+    return recv_idx, recv_val
 
 
 def owner_exchange(
@@ -106,20 +162,26 @@ def owner_exchange(
     capacity: int,
     block: int = 2048,
     fill_val=0,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    packed: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """The device level of the binning hierarchy, traced inside shard_map.
 
     ``idx`` is this device's (m_local,) shard of global indices (sentinel
     ``out_size`` marks padding); ``val`` its values, 1-D or row-valued.
-    Returns ``(local_idx, val)`` of length ``n_dev * capacity``: the
-    tuples owned by this device, indices rebased to the local range, with
-    every padding/foreign slot rebased to the sentinel ``shard_range``
-    (dropped by any local reduce/binning over the local domain).
+    Returns ``(local_idx, val, overflow)``: ``n_dev * capacity`` tuples
+    owned by this device, indices rebased to the local range with every
+    padding/foreign slot rebased to the sentinel ``shard_range`` (dropped
+    by any local reduce/binning over the local domain), plus a scalar
+    bool ``overflow`` — True when any of THIS device's per-destination
+    segments exceeded ``capacity`` (tuples beyond it do not ship, so the
+    caller must treat the result as invalid and rerun at the always-safe
+    capacity; ``shard_reduce_stream`` does this automatically).
 
     ``capacity`` is the per-destination segment size of the padded
-    exchange; it must cover the largest (source, destination) tuple
-    count or tuples are silently dropped — callers default to the
-    always-safe ``m_local`` (DESIGN.md §9 discusses the trade-off).
+    exchange; the always-safe value is the local stream length
+    (DESIGN.md §9 discusses the volume trade-off, §13 the estimated
+    default + overflow fallback). ``packed`` rides the index in the
+    value buffer when dtypes permit (one collective instead of two).
     """
     m_local = idx.shape[0]
     valid = idx < out_size
@@ -130,6 +192,7 @@ def owner_exchange(
     idx_s = jnp.take(idx, inv)
     val_s = jnp.take(val, inv, axis=0)
     starts = pb.starts_from_counts(counts)  # (n_dev+2,)
+    overflow = jnp.any(counts[:n_dev] > capacity)
 
     # pack per-destination segments into fixed (n_dev, capacity) rows
     j = jnp.arange(capacity, dtype=jnp.int32)
@@ -143,10 +206,10 @@ def owner_exchange(
     mask = in_seg.reshape((n_dev, capacity) + (1,) * (val.ndim - 1))
     send_val = jnp.where(mask, vseg, jnp.asarray(fill_val, val.dtype))
 
-    # one collective: row d of the send buffer becomes row (this device)
-    # of device d's receive buffer — the interconnect eviction path
-    recv_idx = jax.lax.all_to_all(send_idx, axis_name, split_axis=0, concat_axis=0)
-    recv_val = jax.lax.all_to_all(send_val, axis_name, split_axis=0, concat_axis=0)
+    # one collective (two when packing is off/illegal): row d of the send
+    # buffer becomes row (this device) of device d's receive buffer — the
+    # interconnect eviction path
+    recv_idx, recv_val = _exchange_buffers(send_idx, send_val, axis_name, packed)
 
     shard = jax.lax.axis_index(axis_name)
     flat_idx = recv_idx.reshape(-1)
@@ -155,6 +218,7 @@ def owner_exchange(
     return (
         local_idx.astype(jnp.int32),
         recv_val.reshape((n_dev * capacity,) + val.shape[1:]),
+        overflow,
     )
 
 
@@ -171,18 +235,130 @@ def clamp_for_local_reduce(local_idx: jnp.ndarray, shard_range: int) -> jnp.ndar
     return jnp.minimum(local_idx, shard_range - 1)
 
 
-@functools.lru_cache(maxsize=128)
-def _jitted_shard_reduce(
-    mesh, axis_name, out_size, op, method, shard_range, n_dev, capacity, block,
-    bin_range, plan,
-):
-    ident_fill = 0 if op == "add" else None  # resolved per-dtype below
+# ---------------------------------------------------------------------------
+# Chunked, double-buffered pipeline (DESIGN.md §13).
+# ---------------------------------------------------------------------------
 
-    def f(idx, val):
-        fill = pb.reduce_identity(op, val.dtype) if ident_fill is None else 0
-        local_idx, local_val = owner_exchange(
-            idx,
-            val,
+
+def default_pipeline_chunks(
+    num_tuples: int, num_indices: int, n_dev: int, max_chunks: int = 4
+) -> int:
+    """Analytic chunk count from the roofline overlap model: the K that
+    minimizes modeled pipelined time plus per-chunk launch overhead —
+    K=1 for streams too small to amortize extra collective launches."""
+    if n_dev <= 1 or num_tuples <= 0:
+        return 1
+    from repro.roofline import ShardedPBStreamRoofline
+
+    rl = ShardedPBStreamRoofline(
+        num_tuples=num_tuples, num_indices=max(1, num_indices), n_dev=n_dev
+    )
+    return rl.best_pipeline_chunks(max_chunks=max_chunks)
+
+
+def estimate_capacity(
+    indices,
+    *,
+    out_size: int,
+    n_dev: int,
+    chunks: int = 1,
+    sample: int = 1 << 16,
+    slack: float = 1.3,
+    floor: int = 64,
+) -> int:
+    """Cheap per-destination capacity estimate from owner skew.
+
+    Strided host sample of the index stream -> per-owner histogram ->
+    the heaviest owner's mass (the q=1.0 quantile of per-owner counts)
+    scaled to one chunk's length with ``slack`` headroom plus a small
+    additive ``floor`` for sampling noise. Always clamped to the
+    always-safe chunk length; the runtime overflow flag guards the
+    (rare) under-estimate. On a uniform stream this removes the n_dev×
+    padding inflation of the safe default (DESIGN.md §13).
+    """
+    m = int(indices.shape[0])
+    chunks = max(1, int(chunks))
+    if m == 0 or n_dev <= 1:
+        return 1
+    shard_range = shard_range_for(out_size, n_dev)
+    m_local = -(-m // n_dev)
+    chunk_len = -(-m_local // chunks)
+    stride = max(1, m // int(sample))
+    h = np.asarray(indices[::stride]).astype(np.int64)
+    h = h[(h >= 0) & (h < out_size)]
+    if h.size == 0:
+        return chunk_len
+    counts = np.bincount(h // shard_range, minlength=n_dev)
+    top_frac = counts.max() / h.size
+    est = int(math.ceil(top_frac * chunk_len * slack)) + floor
+    return max(1, min(chunk_len, est))
+
+
+def _chunk_layout(m_local: int, chunks: int) -> Tuple[int, int]:
+    """Clamp K to the local stream and size its chunks: K never exceeds
+    m_local (a chunk must hold at least one tuple slot)."""
+    k = max(1, min(int(chunks), max(1, m_local)))
+    return k, -(-max(1, m_local) // k)
+
+
+def _combine_fn(op: str):
+    if op == "add":
+        return lambda a, b: a + b
+    if op == "min":
+        return jnp.minimum
+    return jnp.maximum
+
+
+def pipelined_owner_reduce(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    out_size: int,
+    shard_range: int,
+    n_dev: int,
+    axis_name: str,
+    capacity: int,
+    chunks: int = 1,
+    op: str = "add",
+    method: str = "fused",
+    bin_range: Optional[int] = None,
+    plan=None,
+    block: int = 2048,
+    packed: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked exchange+reduce, traced inside shard_map (DESIGN.md §13).
+
+    Splits this device's (m_local,) shard into ``chunks`` statically
+    unrolled pieces; chunk *i+1*'s ``all_to_all`` is issued before chunk
+    *i*'s local reduce consumes its received buffer, so the compiler can
+    overlap the next exchange with the current bin-and-accumulate
+    (double buffering: two chunk recv buffers live at once).
+    ``capacity`` is PER-CHUNK per-destination. Returns ``(acc,
+    overflow)``: the (shard_range, ...) local accumulator and a
+    replicated bool that is True when ANY device overflowed on ANY
+    chunk (psum across the axis).
+
+    ``chunks=1`` is exactly the monolithic schedule — one exchange, one
+    reduce, no partial-accumulator combine — so K=1 stays bit-stable
+    with the pre-pipeline path. For K>1, integer ops and min/max stay
+    bit-exact (order-independent); float ``add`` gains a partials tree
+    (chunk-major) and compares to tolerance, the same caveat as
+    sharded-vs-single-device.
+    """
+    m_local = idx.shape[0]
+    k, chunk_len = _chunk_layout(m_local, chunks)
+    fill = pb.reduce_identity(op, val.dtype)
+    padn = k * chunk_len - m_local
+    if padn:
+        idx = jnp.pad(idx, (0, padn), constant_values=out_size)
+        width = [(0, padn)] + [(0, 0)] * (val.ndim - 1)
+        val = jnp.pad(val, width, constant_values=0)
+
+    def exchange(i: int):
+        sl = slice(i * chunk_len, (i + 1) * chunk_len)
+        return owner_exchange(
+            idx[sl],
+            val[sl],
             out_size=out_size,
             shard_range=shard_range,
             n_dev=n_dev,
@@ -190,10 +366,13 @@ def _jitted_shard_reduce(
             capacity=capacity,
             block=block,
             fill_val=fill,
+            packed=packed,
         )
+
+    def local_reduce(li, lv):
         return execute_reduce(
-            clamp_for_local_reduce(local_idx, shard_range),
-            local_val,
+            clamp_for_local_reduce(li, shard_range),
+            lv,
             out_size=shard_range,
             op=op,
             method=method,
@@ -202,11 +381,203 @@ def _jitted_shard_reduce(
             block=block,
         )
 
+    li, lv, of = exchange(0)
+    if k == 1:
+        acc = local_reduce(li, lv)
+    else:
+        combine = _combine_fn(op)
+        acc = jnp.full((shard_range,) + val.shape[1:], fill, val.dtype)
+        for i in range(1, k):
+            nli, nlv, nof = exchange(i)  # in flight while chunk i-1 reduces
+            acc = combine(acc, local_reduce(li, lv))
+            li, lv, of = nli, nlv, of | nof
+        acc = combine(acc, local_reduce(li, lv))
+    overflow = jax.lax.psum(of.astype(jnp.int32), axis_name) > 0
+    return acc, overflow
+
+
+def pipelined_owner_exchange_ordered(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    out_size: int,
+    shard_range: int,
+    n_dev: int,
+    axis_name: str,
+    capacity: int,
+    chunks: int = 1,
+    block: int = 2048,
+    fill_val=0,
+    packed: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked exchange that preserves GLOBAL stream order for
+    order-aware consumers (``shard_build_csr``).
+
+    Chunk *i*'s receive buffer arrives in (source, slot) order, so naive
+    concatenation across chunks would interleave (chunk, source, slot) —
+    NOT global order. Stacking the K received ``(n_dev, capacity)``
+    buffers and transposing to ``(n_dev, K, capacity)`` before
+    flattening restores source-major order: for each source device, its
+    chunks appear in stream order, which IS the global stream order
+    (source devices hold contiguous global chunks). Sentinel slots
+    (``shard_range``) intersperse but stable downstream
+    grouping/trimming drops them. Returns ``(local_idx, val, overflow)``
+    of length ``chunks * n_dev * capacity``; overflow is psum-replicated
+    as in ``pipelined_owner_reduce``."""
+    m_local = idx.shape[0]
+    k, chunk_len = _chunk_layout(m_local, chunks)
+    padn = k * chunk_len - m_local
+    if padn:
+        idx = jnp.pad(idx, (0, padn), constant_values=out_size)
+        width = [(0, padn)] + [(0, 0)] * (val.ndim - 1)
+        val = jnp.pad(val, width, constant_values=fill_val)
+    lis, lvs = [], []
+    of = None
+    for i in range(k):
+        sl = slice(i * chunk_len, (i + 1) * chunk_len)
+        li, lv, ofi = owner_exchange(
+            idx[sl],
+            val[sl],
+            out_size=out_size,
+            shard_range=shard_range,
+            n_dev=n_dev,
+            axis_name=axis_name,
+            capacity=capacity,
+            block=block,
+            fill_val=fill_val,
+            packed=packed,
+        )
+        lis.append(li.reshape(n_dev, capacity))
+        lvs.append(lv.reshape((n_dev, capacity) + val.shape[1:]))
+        of = ofi if of is None else (of | ofi)
+    # (K, n_dev, cap) -> (n_dev, K, cap): source-major = global order
+    li_all = jnp.stack(lis, axis=0).transpose(1, 0, 2).reshape(-1)
+    lv_all = jnp.stack(lvs, axis=0)
+    lv_all = jnp.moveaxis(lv_all, 0, 1).reshape(
+        (k * n_dev * capacity,) + val.shape[1:]
+    )
+    overflow = jax.lax.psum(of.astype(jnp.int32), axis_name) > 0
+    return li_all, lv_all, overflow
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_shard_reduce(
+    mesh, axis_name, out_size, op, method, shard_range, n_dev, capacity, chunks,
+    block, bin_range, plan, packed, donate,
+):
+    def f(idx, val):
+        return pipelined_owner_reduce(
+            idx,
+            val,
+            out_size=out_size,
+            shard_range=shard_range,
+            n_dev=n_dev,
+            axis_name=axis_name,
+            capacity=capacity,
+            chunks=chunks,
+            op=op,
+            method=method,
+            bin_range=bin_range,
+            plan=plan,
+            block=block,
+            packed=packed,
+        )
+
     spec = P(axis_name)
     sharded = shard_map(
-        f, mesh=mesh, in_specs=(spec, spec), out_specs=spec, check_vma=False
+        f, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, P()), check_vma=False
     )
-    return jax.jit(sharded)
+    # donate only when the caller padded (fresh buffers it owns) AND no
+    # overflow rerun can need them again — see shard_reduce_stream_info
+    return jax.jit(sharded, donate_argnums=(0, 1) if donate else ())
+
+
+def shard_reduce_stream_info(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    out_size: int,
+    mesh: Optional[Mesh] = None,
+    op: str = "add",
+    axis_name: Optional[str] = None,
+    method: str = "fused",
+    bin_range: Optional[int] = None,
+    capacity: Optional[int] = None,
+    block: int = 2048,
+    plan=None,
+    pipeline_chunks: Optional[int] = None,
+    packed: bool = True,
+) -> Tuple[jnp.ndarray, dict]:
+    """``shard_reduce_stream`` plus an info dict for logging/benchmarks:
+    ``{"capacity", "pipeline_chunks", "overflow", "fallback", "packed",
+    "safe_capacity"}``. ``capacity`` here is the per-destination TOTAL
+    segment budget (back-compat with the pre-pipeline API); the
+    per-chunk capacity is derived as ``ceil(capacity / K)``. ``None``
+    estimates it from owner skew (``estimate_capacity``), guarded by the
+    overflow fallback: on overflow the reduce reruns once at the
+    always-safe chunk length."""
+    if op not in REDUCE_OPS:
+        raise ValueError(
+            f"shard_reduce_stream serves commutative reductions {REDUCE_OPS}; "
+            f"got op={op!r}"
+        )
+    n_dev = 1 if mesh is None else int(mesh.shape[resolve_stream_axis(mesh, axis_name)])
+    info = {
+        "capacity": 0, "pipeline_chunks": 1, "overflow": False,
+        "fallback": False, "packed": False, "safe_capacity": 0,
+    }
+    if mesh is None or n_dev == 1:
+        out = execute_reduce(
+            indices, values, out_size=out_size, op=op, method=method,
+            bin_range=bin_range, block=block, plan=plan,
+        )
+        return out, info
+    axis = resolve_stream_axis(mesh, axis_name)
+    m = int(indices.shape[0])
+    ident = pb.reduce_identity(op, values.dtype)
+    if m == 0:
+        return jnp.full((out_size,) + values.shape[1:], ident, values.dtype), info
+    r = shard_range_for(out_size, n_dev)
+    m_local = -(-m // n_dev)
+    k = (
+        pipeline_chunks
+        if pipeline_chunks is not None
+        else default_pipeline_chunks(m, out_size, n_dev)
+    )
+    k, chunk_len = _chunk_layout(m_local, k)
+    if capacity is not None:
+        cap = max(1, min(chunk_len, -(-int(capacity) // k)))
+    else:
+        cap = estimate_capacity(indices, out_size=out_size, n_dev=n_dev, chunks=k)
+    pk = packed and can_pack(values.dtype)
+    info.update(
+        capacity=cap, pipeline_chunks=k, packed=bool(pk), safe_capacity=chunk_len
+    )
+    # pad to n_dev * K * chunk_len: sentinel index out_size marks padding
+    # all the way down the pipeline
+    per_dev = k * chunk_len
+    idx_p = _pad_to_multiple(indices, n_dev * per_dev, out_size)
+    val_p = _pad_to_multiple(values, n_dev * per_dev, 0)
+    fresh = idx_p is not indices  # padding made device-private copies
+    # donate the padded buffers only when no overflow rerun can need them
+    fn = _jitted_shard_reduce(
+        mesh, axis, out_size, op, method, r, n_dev, cap, k, block, bin_range,
+        plan, pk, fresh and cap >= chunk_len,
+    )
+    out, overflow = fn(idx_p, val_p)
+    if cap < chunk_len and bool(overflow):
+        # estimated capacity lost tuples: rerun once at the always-safe
+        # per-chunk capacity (= chunk length). The first result is
+        # discarded; correctness over the saved exchange volume. The
+        # first call never donated (cap < chunk_len), so the padded
+        # buffers are still live — donate them now (no further rerun).
+        info.update(overflow=True, fallback=True, capacity=chunk_len)
+        fn = _jitted_shard_reduce(
+            mesh, axis, out_size, op, method, r, n_dev, chunk_len, k, block,
+            bin_range, plan, pk, fresh,
+        )
+        out, _ = fn(idx_p, val_p)
+    return out[:out_size], info
 
 
 def shard_reduce_stream(
@@ -222,53 +593,38 @@ def shard_reduce_stream(
     capacity: Optional[int] = None,
     block: int = 2048,
     plan=None,
+    pipeline_chunks: Optional[int] = None,
+    packed: bool = True,
 ) -> jnp.ndarray:
     """Reduce one commutative (indices, values) stream to a dense
-    ``(out_size, ...)`` array across a device mesh (DESIGN.md §9).
+    ``(out_size, ...)`` array across a device mesh (DESIGN.md §9, §13).
 
     The coarsest binning pass routes tuples over the interconnect
-    (``owner_exchange``); each device then runs the single-device reduce
-    (``method``, default the fused single sweep of DESIGN.md §8) over its
-    owned index range, and the owner-sharded results concatenate to the
-    global output. Numerically equivalent to single-device
-    ``execute_reduce``: exact for integer ops; for floats the summation
-    tree differs (per-shard partials), so compare with a tolerance.
+    (``owner_exchange``) in ``pipeline_chunks`` double-buffered pieces
+    (default: the roofline overlap model's pick; K=1 on tiny streams);
+    each device then runs the single-device reduce (``method``, default
+    the fused single sweep of DESIGN.md §8) over its owned index range,
+    and the owner-sharded results concatenate to the global output.
+    Numerically equivalent to single-device ``execute_reduce``: exact
+    for integer ops and min/max at any K; float ``add`` partials differ
+    (per-shard and, at K>1, per-chunk trees), so compare with a
+    tolerance.
 
     ``mesh=None`` or a 1-device mesh IS the single-device path —
     bit-stable with today's ``execute_reduce``. Handles empty shards
     (``out_size < n_dev``) and non-divisible stream/domain sizes via
     sentinel-dropped padding. ``capacity`` (tuples per destination
-    segment; default the always-safe per-device stream length) trades
-    exchange volume against worst-case skew — see DESIGN.md §9.
+    segment across the whole stream; default a cheap owner-skew
+    estimate guarded by the overflow fallback) trades exchange volume
+    against worst-case skew — see DESIGN.md §9/§13.
     """
-    if op not in REDUCE_OPS:
-        raise ValueError(
-            f"shard_reduce_stream serves commutative reductions {REDUCE_OPS}; "
-            f"got op={op!r}"
-        )
-    n_dev = 1 if mesh is None else int(mesh.shape[resolve_stream_axis(mesh, axis_name)])
-    if mesh is None or n_dev == 1:
-        return execute_reduce(
-            indices, values, out_size=out_size, op=op, method=method,
-            bin_range=bin_range, block=block, plan=plan,
-        )
-    axis = resolve_stream_axis(mesh, axis_name)
-    m = int(indices.shape[0])
-    ident = pb.reduce_identity(op, values.dtype)
-    if m == 0:
-        return jnp.full((out_size,) + values.shape[1:], ident, values.dtype)
-    r = shard_range_for(out_size, n_dev)
-    m_local = -(-m // n_dev)
-    cap = int(capacity) if capacity is not None else m_local
-    # pad to n_dev * m_local (the next multiple of n_dev): sentinel index
-    # out_size marks padding all the way down the pipeline
-    idx_p = _pad_to_multiple(indices, n_dev, out_size)
-    val_p = _pad_to_multiple(values, n_dev, 0)
-    fn = _jitted_shard_reduce(
-        mesh, axis, out_size, op, method, r, n_dev, cap, block, bin_range, plan,
+    out, _ = shard_reduce_stream_info(
+        indices, values, out_size=out_size, mesh=mesh, op=op,
+        axis_name=axis_name, method=method, bin_range=bin_range,
+        capacity=capacity, block=block, plan=plan,
+        pipeline_chunks=pipeline_chunks, packed=packed,
     )
-    out = fn(idx_p, val_p)
-    return out[:out_size]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -277,9 +633,11 @@ def shard_reduce_stream(
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_shard_csr(mesh, axis_name, num_nodes, shard_range, n_dev, capacity, block):
+def _jitted_shard_csr(
+    mesh, axis_name, num_nodes, shard_range, n_dev, capacity, chunks, block, packed
+):
     def f(src, dst):
-        local_src, dst_r = owner_exchange(
+        local_src, dst_r, overflow = pipelined_owner_exchange_ordered(
             src,
             dst,
             out_size=num_nodes,
@@ -287,7 +645,9 @@ def _jitted_shard_csr(mesh, axis_name, num_nodes, shard_range, n_dev, capacity, 
             n_dev=n_dev,
             axis_name=axis_name,
             capacity=capacity,
+            chunks=chunks,
             block=block,
+            packed=packed,
         )
         # Bin-Read over the owned vertex range: fine stable grouping by
         # local src. Sentinels (shard_range) sort last and are trimmed
@@ -295,7 +655,7 @@ def _jitted_shard_csr(mesh, axis_name, num_nodes, shard_range, n_dev, capacity, 
         order = jnp.argsort(local_src, stable=True)
         dst_sorted = jnp.take(dst_r, order)
         count = jnp.sum(local_src < shard_range).astype(jnp.int32)
-        return dst_sorted[None, :], count[None]
+        return dst_sorted[None, :], count[None], overflow
 
     spec = P(axis_name)
     return jax.jit(
@@ -303,7 +663,7 @@ def _jitted_shard_csr(mesh, axis_name, num_nodes, shard_range, n_dev, capacity, 
             f,
             mesh=mesh,
             in_specs=(spec, spec),
-            out_specs=(P(axis_name, None), spec),
+            out_specs=(P(axis_name, None), spec, P()),
             check_vma=False,
         )
     )
@@ -315,16 +675,22 @@ def shard_build_csr(
     axis_name: Optional[str] = None,
     capacity: Optional[int] = None,
     block: int = 2048,
+    pipeline_chunks: Optional[int] = None,
+    packed: bool = True,
 ) -> CSR:
     """Distributed Neighbor-Populate (paper Algorithm 2 at mesh scale,
     DESIGN.md §9): edges are owner-routed by source vertex over the
-    interconnect, each device stably groups its owned vertex range, and
-    the owned neighbor-array slices concatenate (in shard order = global
-    vertex order) into the CSR. Degree counting runs as the sharded
-    fused reduction. Stability across the shard boundary (stable local
-    partition + source-ordered all_to_all) preserves Edgelist order
-    within each vertex, so the result matches ``build_csr_oracle``
-    exactly — the same guarantee the single-device PB build gives.
+    interconnect (in ``pipeline_chunks`` double-buffered pieces), each
+    device stably groups its owned vertex range, and the owned
+    neighbor-array slices concatenate (in shard order = global vertex
+    order) into the CSR. Degree counting runs as the sharded fused
+    reduction. Stability across BOTH the shard and the chunk boundary
+    (stable local partition + source-ordered all_to_all + the
+    chunk-transpose of ``pipelined_owner_exchange_ordered``) preserves
+    Edgelist order within each vertex, so the result matches
+    ``build_csr_oracle`` exactly — the same guarantee the single-device
+    PB build gives. Estimated capacities are overflow-guarded: on
+    overflow the exchange reruns once at the always-safe chunk length.
     """
     n, m = coo.num_nodes, coo.num_edges
     n_dev = 1 if mesh is None else int(mesh.shape[resolve_stream_axis(mesh, axis_name)])
@@ -346,15 +712,30 @@ def shard_build_csr(
         op="add",
         axis_name=axis,
         capacity=capacity,
+        pipeline_chunks=pipeline_chunks,
     )
     offsets = offsets_from_degrees(degrees)
     r = shard_range_for(n, n_dev)
     m_local = -(-m // n_dev)
-    cap = int(capacity) if capacity is not None else m_local
-    src_p = _pad_to_multiple(coo.src, n_dev, n)  # sentinel src = n: dropped
-    dst_p = _pad_to_multiple(coo.dst, n_dev, 0)
-    fn = _jitted_shard_csr(mesh, axis, n, r, n_dev, cap, block)
-    dst_sorted, counts = fn(src_p, dst_p)
+    k = (
+        pipeline_chunks
+        if pipeline_chunks is not None
+        else default_pipeline_chunks(m, n, n_dev)
+    )
+    k, chunk_len = _chunk_layout(m_local, k)
+    if capacity is not None:
+        cap = max(1, min(chunk_len, -(-int(capacity) // k)))
+    else:
+        cap = estimate_capacity(coo.src, out_size=n, n_dev=n_dev, chunks=k)
+    pk = packed and can_pack(coo.dst.dtype)
+    per_dev = k * chunk_len
+    src_p = _pad_to_multiple(coo.src, n_dev * per_dev, n)  # sentinel src = n
+    dst_p = _pad_to_multiple(coo.dst, n_dev * per_dev, 0)
+    fn = _jitted_shard_csr(mesh, axis, n, r, n_dev, cap, k, block, pk)
+    dst_sorted, counts, overflow = fn(src_p, dst_p)
+    if cap < chunk_len and bool(overflow):
+        fn = _jitted_shard_csr(mesh, axis, n, r, n_dev, chunk_len, k, block, pk)
+        dst_sorted, counts, overflow = fn(src_p, dst_p)
     # host assembly: concatenate the valid prefix of every owned slice
     # (ragged lengths = per-shard edge ownership, data-dependent)
     ds = np.asarray(dst_sorted)

@@ -55,7 +55,7 @@ import json
 import math
 import os
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -415,13 +415,20 @@ def dispatch_permutation(
 
 @dataclass(frozen=True)
 class BinningDecision:
-    """What the executor chose for one stream shape, and why."""
+    """What the executor chose for one stream shape, and why.
+
+    ``pipeline_chunks`` is the sharded-exchange pipeline depth K
+    (DESIGN.md §13): 1 everywhere except mesh-sharded reduce decisions,
+    where the roofline overlap model (or a measured sweep under the
+    topology-extended ``:pipeline`` cache key) picks how many
+    double-buffered chunks the owner exchange splits into."""
 
     method: str
     bin_range: int
     num_bins: int
     plan: Optional[CobraPlan]
     source: str  # analytic | fallback-table | autotuned | cache
+    pipeline_chunks: int = 1
 
     def describe(self) -> str:
         return f"{self.method}@r{self.bin_range}[{self.source}]"
@@ -652,6 +659,7 @@ class PBExecutor:
         # exact per-call trace (PreprocessPipeline stage reports) still
         # sees decisions after the shared log saturates
         self._decision_sinks: list = []
+        self._last_entry: Optional[dict] = None
 
     # -- decision ----------------------------------------------------------
 
@@ -783,6 +791,16 @@ class PBExecutor:
         d = self._decide_uncached(
             key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
         )
+        if mesh_shape and kind == "reduce":
+            # the pipeline-depth axis of a sharded decision (DESIGN.md
+            # §13): measured entry under the topology-extended key when
+            # one exists, else the roofline overlap model
+            d = _dc_replace(
+                d,
+                pipeline_chunks=self._pipeline_chunks_for(
+                    key, num_indices, stream_len, mesh_shape
+                ),
+            )
         entry = {
             "kind": kind,
             "num_indices": num_indices,
@@ -795,12 +813,18 @@ class PBExecutor:
             entry["op"] = op
         if mesh_shape:
             entry["mesh"] = {a: s for a, s in mesh_shape}
+            if kind == "reduce":
+                entry["pipeline_chunks"] = d.pipeline_chunks
         self._log_decision(entry)
         return d
 
     def _log_decision(self, entry: dict) -> None:
         """Append one decision record to the bounded shared log and every
-        registered uncapped sink."""
+        registered uncapped sink. The entry object is also remembered so
+        ``shard_reduce_stream`` can enrich ITS decision record in place
+        with post-run exchange facts (chosen capacity, overflow) — same
+        dict everywhere, so log and sinks both see the update."""
+        self._last_entry = entry
         if len(self.decision_log) < _DECISION_LOG_CAP:
             self.decision_log.append(entry)
         for sink in self._decision_sinks:
@@ -870,6 +894,86 @@ class PBExecutor:
             else self.analytic_method(num_indices, stream_len, bin_range)
         )
         return self._finalize(analytic, num_indices, bin_range, "analytic")
+
+    # -- pipeline depth (sharded exchange, DESIGN.md §13) ------------------
+
+    def _pipeline_chunks_for(
+        self,
+        key: str,
+        num_indices: int,
+        stream_len: int,
+        mesh_shape: Tuple[Tuple[str, int], ...],
+    ) -> int:
+        """K for a sharded reduce decision: the measured ``:pipeline``
+        cache entry when one exists (written by ``_tune_pipeline_chunks``
+        under the same topology-extended key), else the roofline overlap
+        model evaluated at the global stream shape."""
+        n_dev = 1
+        for _, s in mesh_shape:
+            n_dev *= int(s)
+        if n_dev <= 1 or stream_len <= 0:
+            return 1
+        hit = self.cache.get(f"{key}:pipeline")
+        if hit is not None and "pipeline_chunks" in hit:
+            return max(1, int(hit["pipeline_chunks"]))
+        from repro.roofline import ShardedPBStreamRoofline
+
+        rl = ShardedPBStreamRoofline(
+            num_tuples=max(1, stream_len),
+            num_indices=max(1, num_indices * n_dev),
+            n_dev=n_dev,
+        )
+        return rl.best_pipeline_chunks()
+
+    def _tune_pipeline_chunks(
+        self,
+        key: str,
+        indices,
+        values,
+        *,
+        out_size: int,
+        mesh,
+        op: str,
+        axis_name: Optional[str],
+        d: BinningDecision,
+        capacity: int,
+    ) -> int:
+        """Measure K ∈ {1, 2, 4} on the REAL stream and mesh, persist the
+        winner under ``key:pipeline``. This is how the autotuner learns
+        that K=1 beats pipelining on tiny streams (per-chunk collective
+        launch overhead dominates) without trusting the model."""
+        hit = self.cache.get(f"{key}:pipeline")
+        if hit is not None and "pipeline_chunks" in hit:
+            return max(1, int(hit["pipeline_chunks"]))
+        from repro.core import distributed_pb as dpb
+
+        timings: dict = {}
+        for k in (1, 2, 4):
+            def run():
+                return dpb.shard_reduce_stream(
+                    indices, values, out_size=out_size, mesh=mesh, op=op,
+                    axis_name=axis_name, method=d.method,
+                    bin_range=d.bin_range, plan=d.plan, capacity=capacity,
+                    block=self.block, pipeline_chunks=k,
+                )
+
+            try:
+                jax.block_until_ready(run())  # compile + warm
+                ts = []
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run())
+                    ts.append(time.perf_counter() - t0)
+                timings[str(k)] = min(ts) * 1e6
+            except Exception:
+                continue
+        if not timings:
+            return 1
+        best = int(min(timings, key=timings.get))
+        self.cache.put(
+            f"{key}:pipeline", {"pipeline_chunks": best, "timings_us": timings}
+        )
+        return best
 
     # -- autotune measurement ---------------------------------------------
 
@@ -1147,14 +1251,22 @@ class PBExecutor:
         bin_range: Optional[int] = None,
         method: Optional[str] = None,
         capacity: Optional[int] = None,
+        pipeline_chunks: Optional[int] = None,
+        packed: bool = True,
     ) -> jnp.ndarray:
-        """Mesh-sharded commutative reduction (DESIGN.md §9): the device
-        shard is the coarsest C-Buffer level, the interconnect its
+        """Mesh-sharded commutative reduction (DESIGN.md §9, §13): the
+        device shard is the coarsest C-Buffer level, the interconnect its
         eviction path (``core/distributed_pb.py``). ``decide`` picks the
         device-local method at the PER-DEVICE shape (owned index range,
         received stream length) under a topology-extended cache key, so
         single-device autotune decisions are never replayed for sharded
-        runs. ``mesh=None`` or one device degrades to ``reduce_stream``
+        runs; the same decision carries the exchange pipeline depth K
+        (``pipeline_chunks=None``: measured ``:pipeline`` cache entry,
+        live-tuned when autotuning, else the roofline overlap model).
+        ``capacity=None`` estimates the per-destination segment size from
+        owner skew, guarded by the overflow fallback; the chosen
+        capacity/K/overflow are recorded on this call's decision-log
+        entry. ``mesh=None`` or one device degrades to ``reduce_stream``
         bit-stably.
         """
         from repro.core import distributed_pb as dpb
@@ -1178,10 +1290,17 @@ class PBExecutor:
             )
         m = int(indices.shape[0])
         r = dpb.shard_range_for(out_size, n_dev)
-        cap = capacity if capacity is not None else -(-max(m, 1) // n_dev)
+        cap_src = "caller" if capacity is not None else "estimated"
+        cap = (
+            int(capacity)
+            if capacity is not None
+            else dpb.estimate_capacity(indices, out_size=out_size, n_dev=n_dev)
+        ) if m > 0 else 1
         flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
+        mesh_shape = tuple(sorted(mesh.shape.items()))
+        entry: Optional[dict] = None
         if method in (None, "auto"):
-            vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
             d = self.decide(
                 r,  # per-device domain: the owned index range
                 n_dev * cap,  # per-device stream: the padded received exchange
@@ -1190,13 +1309,26 @@ class PBExecutor:
                 flat_values=flat,
                 kind="reduce",
                 op=op,
-                mesh_shape=tuple(sorted(mesh.shape.items())),
+                mesh_shape=mesh_shape,
             )
+            entry = self._last_entry  # enriched with exchange facts below
         else:
             d = self._finalize(method, r, bin_range, "caller")
         if not flat and d.method == "pallas":  # pallas binning is 1-D-only
             d = self._finalize("sort", r, bin_range, d.source)
-        return dpb.shard_reduce_stream(
+        k = pipeline_chunks
+        if k is None:
+            key = self._key(r, n_dev * cap, vdtype, bin_range, "reduce", op, mesh_shape)
+            if self.autotune and m > 0:
+                k = self._tune_pipeline_chunks(
+                    key, indices, values, out_size=out_size, mesh=mesh, op=op,
+                    axis_name=axis_name, d=d, capacity=cap,
+                )
+            elif method in (None, "auto"):
+                k = d.pipeline_chunks
+            else:
+                k = self._pipeline_chunks_for(key, r, n_dev * cap, mesh_shape)
+        out, xinfo = dpb.shard_reduce_stream_info(
             indices,
             values,
             out_size=out_size,
@@ -1208,7 +1340,38 @@ class PBExecutor:
             capacity=cap,  # the capacity the decision was keyed on
             block=self.block,
             plan=d.plan,
+            pipeline_chunks=k,
+            packed=packed,
         )
+        xfields = {
+            "capacity": xinfo["capacity"],
+            "capacity_source": (
+                "overflow-fallback" if xinfo["fallback"] else cap_src
+            ),
+            "pipeline_chunks": xinfo["pipeline_chunks"],
+            "overflow": xinfo["overflow"],
+            "packed": xinfo["packed"],
+        }
+        if entry is not None:
+            # same dict object the log and every sink hold: the decision
+            # record gains the exchange facts (PreprocessReport surfaces
+            # overflow this way)
+            entry.update(xfields)
+        else:  # forced method: no decide() entry exists — append one
+            self._log_decision(
+                {
+                    "kind": "shard_exchange",
+                    "num_indices": out_size,
+                    "stream_len": m,
+                    "method": "exchange",
+                    "bin_range": 0,
+                    "source": xfields["capacity_source"],
+                    "op": op,
+                    "mesh": {a: s for a, s in mesh_shape},
+                    **xfields,
+                }
+            )
+        return out
 
     def scatter_add(
         self,

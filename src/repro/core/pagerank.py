@@ -194,35 +194,31 @@ def pagerank_fused(coo: COO, iters: int = 10, method: str | None = None) -> PRRe
 @functools.lru_cache(maxsize=32)
 def _pr_sharded_fn(
     mesh, axis, num_nodes, n_dev, r, iters, method, block, capacity,
-    bin_range=None, plan=None,
+    chunks=1, bin_range=None, plan=None,
 ):
     from repro.compat import shard_map
-    from repro.core.distributed_pb import clamp_for_local_reduce, owner_exchange
-    from repro.core.executor import execute_reduce
+    from repro.core.distributed_pb import pipelined_owner_reduce
     from jax.sharding import PartitionSpec as P
 
     n = num_nodes
 
     def f(src_l, dst_l, outdeg, ranks0):
-        def body(_, ranks):
+        def body(_, state):
+            ranks, of = state
             # sentinel-padded edges carry dst == n and are dropped by the
             # exchange; src padding is 0, a safe gather
             contrib = jnp.take(ranks / outdeg, jnp.minimum(src_l, n - 1))
-            local_idx, local_val = owner_exchange(
+            owned, of_i = pipelined_owner_reduce(
                 dst_l, contrib, out_size=n, shard_range=r, n_dev=n_dev,
-                axis_name=axis, capacity=capacity, block=block,
-            )
-            owned = execute_reduce(
-                clamp_for_local_reduce(local_idx, r), local_val, out_size=r,
-                op="add", method=method, bin_range=bin_range, plan=plan,
-                block=block,
+                axis_name=axis, capacity=capacity, chunks=chunks, op="add",
+                method=method, bin_range=bin_range, plan=plan, block=block,
             )
             # re-replicate ranks for the next iteration's gather: the
             # owned slices cross the interconnect once per iteration
             gathered = jax.lax.all_gather(owned, axis, tiled=True)
-            return (1.0 - DAMP) / n + DAMP * gathered[:n]
+            return (1.0 - DAMP) / n + DAMP * gathered[:n], of | of_i
 
-        return jax.lax.fori_loop(0, iters, body, ranks0)
+        return jax.lax.fori_loop(0, iters, body, (ranks0, jnp.asarray(False)))
 
     spec = P(axis)
     return jax.jit(
@@ -230,7 +226,7 @@ def _pr_sharded_fn(
             f,
             mesh=mesh,
             in_specs=(spec, spec, P(None), P(None)),
-            out_specs=P(None),
+            out_specs=(P(None), P()),
             check_vma=False,
         )
     )
@@ -243,22 +239,29 @@ def pagerank_sharded(
     axis_name: str | None = None,
     method: str | None = None,
     capacity: int | None = None,
+    pipeline_chunks: int | None = None,
 ) -> PRResult:
-    """PageRank with the mesh-sharded PB reduction (DESIGN.md §9): edges
-    are sharded across devices, each iteration owner-routes contributions
-    over the interconnect (``owner_exchange``) and fuses them into the
-    owned rank slice, then the slices all_gather back to a replicated
-    rank vector. Per-device HBM traffic over the edge stream drops with
-    device count; only (contribution tuples + rank slices) cross the
-    interconnect. ``mesh=None``/1 device degrades to ``pagerank_fused``.
+    """PageRank with the mesh-sharded PB reduction (DESIGN.md §9, §13):
+    edges are sharded across devices, each iteration owner-routes
+    contributions over the interconnect in ``pipeline_chunks``
+    double-buffered pieces (``pipelined_owner_reduce``) and fuses them
+    into the owned rank slice, then the slices all_gather back to a
+    replicated rank vector. Per-device HBM traffic over the edge stream
+    drops with device count; only (contribution tuples + rank slices)
+    cross the interconnect. ``mesh=None``/1 device degrades to
+    ``pagerank_fused``.
 
     ``method=None``/"auto" asks ``decide`` at the PER-DEVICE shape
     (owned range, received stream) under the topology-extended cache key
-    — the device-local method is never hardcoded (DESIGN.md §8.1 / §9).
+    — the device-local method is never hardcoded (DESIGN.md §8.1 / §9);
+    the same decision carries the pipeline depth. ``capacity=None``
+    estimates the per-destination segment from owner skew; an overflow
+    reruns once at the always-safe chunk length.
 
-    Float summation trees differ per shard: equivalent to the
-    single-device result to tolerance, not bit-exactly.
+    Float summation trees differ per shard (and per chunk at K>1):
+    equivalent to the single-device result to tolerance, not bit-exactly.
     """
+    from repro.core import distributed_pb as dpb
     from repro.core.distributed_pb import (
         _pad_to_multiple,
         resolve_stream_axis,
@@ -272,17 +275,38 @@ def pagerank_sharded(
     ex = get_default_executor()
     n, m = coo.num_nodes, coo.num_edges
     r = shard_range_for(n, n_dev)
-    cap = capacity if capacity is not None else -(-max(m, 1) // n_dev)
+    m_local = -(-max(m, 1) // n_dev)
+    cap_total = (
+        int(capacity)
+        if capacity is not None
+        else dpb.estimate_capacity(coo.dst, out_size=n, n_dev=n_dev)
+    )
     d = ex.decide_or_forced(
-        method, r, n_dev * cap, jnp.float32, kind="reduce", op="add",
+        method, r, n_dev * cap_total, jnp.float32, kind="reduce", op="add",
         mesh_shape=tuple(sorted(mesh.shape.items())),
     )
+    entry = ex._last_entry if method in (None, "auto") else None
+    k = pipeline_chunks if pipeline_chunks is not None else d.pipeline_chunks
+    k, chunk_len = dpb._chunk_layout(m_local, k)
+    cap = max(1, min(chunk_len, -(-cap_total // k)))
     outdeg = jnp.maximum(jnp.bincount(coo.src, length=n), 1).astype(jnp.float32)
     src_p = _pad_to_multiple(coo.src, n_dev, 0)
     dst_p = _pad_to_multiple(coo.dst, n_dev, n)
     ranks0 = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
     fn = _pr_sharded_fn(
-        mesh, axis, n, n_dev, r, iters, d.method, ex.block, cap,
+        mesh, axis, n, n_dev, r, iters, d.method, ex.block, cap, k,
         d.bin_range, d.plan,
     )
-    return PRResult(fn(src_p, dst_p, outdeg, ranks0), iters)
+    ranks, overflow = fn(src_p, dst_p, outdeg, ranks0)
+    if cap < chunk_len and bool(overflow):
+        # estimated capacity lost tuples: rerun at the always-safe
+        # per-chunk capacity (surfaced on the decision entry)
+        fn = _pr_sharded_fn(
+            mesh, axis, n, n_dev, r, iters, d.method, ex.block, chunk_len, k,
+            d.bin_range, d.plan,
+        )
+        ranks, _ = fn(src_p, dst_p, outdeg, ranks0)
+        if entry is not None:
+            entry.update(overflow=True, capacity=chunk_len,
+                         capacity_source="overflow-fallback")
+    return PRResult(ranks, iters)

@@ -326,6 +326,51 @@ def sharded_exchange_bytes_per_device(
     return 2.0 * (n_dev - 1) * per_dest * tuple_bytes
 
 
+def sharded_exchange_chunk_bytes_per_device(
+    num_tuples: int,
+    n_dev: int,
+    chunks: int,
+    tuple_bytes: int = TUPLE_BYTES,
+    padded_capacity: float | None = None,
+) -> float:
+    """Per-device interconnect bytes (send + receive) of ONE pipeline
+    chunk's all_to_all (DESIGN.md §13): the local stream splits into
+    ``chunks`` pieces, so each chunk ships ``1/chunks`` of the
+    per-destination segment. ``padded_capacity`` here is the PER-CHUNK
+    per-destination capacity of a padded exchange."""
+    n_dev = max(1, n_dev)
+    chunks = max(1, chunks)
+    if n_dev == 1:
+        return 0.0
+    m_chunk = num_tuples / n_dev / chunks
+    per_dest = padded_capacity if padded_capacity is not None else m_chunk / n_dev
+    return 2.0 * (n_dev - 1) * per_dest * tuple_bytes
+
+
+def sharded_pipelined_exchange_bytes_per_device(
+    num_tuples: int,
+    n_dev: int,
+    chunks: int,
+    tuple_bytes: int = TUPLE_BYTES,
+    padded_capacity: float | None = None,
+) -> float:
+    """Total per-device interconnect bytes across all pipeline chunks —
+    ``chunks ×`` the per-chunk counter. With ragged (exact) modeling the
+    total is invariant in ``chunks`` (the same tuples cross the wire, in
+    more launches); with per-chunk padding the total can exceed the
+    monolithic padded exchange whenever per-chunk capacities round up."""
+    return chunks * sharded_exchange_chunk_bytes_per_device(
+        num_tuples, n_dev, chunks, tuple_bytes, padded_capacity
+    )
+
+
+def exchange_collective_launches(chunks: int, packed: bool = True) -> int:
+    """Collective launches one sharded reduce issues: one all_to_all per
+    chunk when index+value ride the packed buffer, two otherwise — the
+    count the packed-exchange optimization halves (DESIGN.md §13)."""
+    return max(1, chunks) * (1 if packed else 2)
+
+
 def sharded_fused_seconds_per_device(
     num_tuples: int,
     num_indices: int,

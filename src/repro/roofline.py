@@ -253,6 +253,12 @@ class ShardedPBStreamRoofline:
     hbm_bw: float = 819e9
     ici_bw: float = 50e9
     padded_capacity: Optional[float] = None
+    # pipeline depth K of the chunked exchange (DESIGN.md §13); 1 = the
+    # monolithic partition -> all_to_all -> reduce schedule
+    pipeline_chunks: int = 1
+    # fixed cost per collective launch, charged once per chunk in
+    # best_pipeline_chunks — the term that makes K=1 win on tiny streams
+    launch_overhead_s: float = 20e-6
 
     @property
     def hbm_bytes_per_device(self) -> float:
@@ -285,7 +291,59 @@ class ShardedPBStreamRoofline:
 
     @property
     def t_step(self) -> float:
+        """Fully-overlapped floor: the slower of the two engines. The
+        schedule-aware time for a given K is ``t_pipelined``."""
         return max(self.t_hbm, self.t_ici)
+
+    @property
+    def t_sequential(self) -> float:
+        """The K=1 schedule: exchange fully drains, then the local
+        reduce runs — ICI and HBM each idle while the other works."""
+        return self.t_hbm + self.t_ici
+
+    def t_pipelined(self, chunks: Optional[int] = None) -> float:
+        """Modeled step time of the K-chunk double-buffered schedule
+        (DESIGN.md §13): the first chunk's exchange is exposed (ICI
+        prologue, t_ici/K), the last chunk's reduce is exposed (HBM
+        epilogue, t_hbm/K), and the K-1 middle slots each take the max
+        of one chunk-exchange and one chunk-reduce. K=1 recovers
+        ``t_sequential``; K→∞ approaches ``t_step`` (perfect overlap)."""
+        k = self.pipeline_chunks if chunks is None else chunks
+        k = max(1, int(k))
+        if k == 1:
+            return self.t_sequential
+        th, ti = self.t_hbm, self.t_ici
+        return ti / k + (k - 1) / k * max(th, ti) + th / k
+
+    def hidden_exchange_fraction(self, chunks: Optional[int] = None) -> float:
+        """Fraction of the exchange time hidden behind local reduces:
+        0 at K=1 (fully exposed), → 1 as overlap approaches perfect
+        when HBM is the bottleneck. fig7 reports this modeled value
+        next to the measured overlap efficiency."""
+        ti = self.t_ici
+        if ti <= 0.0:
+            return 1.0
+        exposed = self.t_pipelined(chunks) - self.t_hbm
+        return min(1.0, max(0.0, 1.0 - exposed / ti))
+
+    def overlap_efficiency(self, chunks: Optional[int] = None) -> float:
+        """Modeled speedup of the K-chunk schedule over sequential:
+        t_sequential / t_pipelined(K), in [1, 2]."""
+        return self.t_sequential / max(self.t_pipelined(chunks), 1e-30)
+
+    def best_pipeline_chunks(self, max_chunks: int = 4) -> int:
+        """The K (power of two up to ``max_chunks``) minimizing modeled
+        pipelined time plus per-chunk launch overhead. Tiny streams pick
+        K=1: the overlap saving (bounded by min(t_hbm, t_ici)) cannot
+        pay for extra collective launches."""
+        best_k, best_t = 1, self.t_sequential + self.launch_overhead_s
+        k = 2
+        while k <= max_chunks:
+            t = self.t_pipelined(k) + k * self.launch_overhead_s
+            if t < best_t:
+                best_k, best_t = k, t
+            k *= 2
+        return best_k
 
     @property
     def speedup_ceiling(self) -> float:

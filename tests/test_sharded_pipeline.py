@@ -1,0 +1,442 @@
+"""Chunked, double-buffered exchange pipeline (DESIGN.md §13).
+
+Mesh-dependent equivalence tests run in a subprocess with 8 forced host
+devices (the test_distributed.py isolation rule); topology-free pieces —
+capacity estimation, chunk layout, the roofline overlap model, the
+chunked traffic counters — run in-process. The subprocess grids are the
+always-on leg of the property suite; the hypothesis leg (skipped when
+hypothesis is absent) fuzzes the host-side invariants the grids pin.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str, devices: int = 8, timeout: int = 900):
+    code = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: chunked == monolithic across op × method × K × value shape.
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_equals_monolithic_8dev():
+    """The pipelined schedule is a pure schedule change: K ∈ {2, 4} must
+    reproduce K=1 bit-for-bit for every order-independent op (int add,
+    min, max — float add compares to tolerance, the documented partials
+    caveat), under every local reduce method, for scalar and row values,
+    and on non-divisible stream/domain sizes."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import make_stream_mesh, shard_reduce_stream
+        from repro.core.executor import execute_reduce
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        rng = np.random.default_rng(42)
+        m, n = 1733, 451  # non-divisible by 8 on both axes
+
+        idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        ival = jnp.asarray(rng.integers(-50, 50, m), jnp.int32)
+        fval = jnp.asarray(rng.standard_normal(m), jnp.float32)
+
+        def run(val, op, method, K):
+            return np.asarray(shard_reduce_stream(
+                idx, val, out_size=n, mesh=mesh, op=op, method=method,
+                pipeline_chunks=K))
+
+        for method in ("fused", "sort", "counting"):
+            for op in ("add", "min", "max"):
+                # int: bit-exact at any K, and == the single-device oracle
+                want = np.asarray(execute_reduce(
+                    idx, ival, out_size=n, op=op, method="fused"))
+                for K in (1, 2, 4):
+                    got = run(ival, op, method, K)
+                    assert np.array_equal(got, want), (op, method, K)
+            # float min/max: order-independent -> bit-exact across K
+            for op in ("min", "max"):
+                k1 = run(fval, op, method, 1)
+                for K in (2, 4):
+                    assert np.array_equal(run(fval, op, method, K), k1), (
+                        op, method, K)
+            # float add: chunk-major partials tree -> tolerance
+            k1 = run(fval, "add", method, 1)
+            for K in (2, 4):
+                np.testing.assert_allclose(
+                    run(fval, "add", method, K), k1, rtol=1e-5, atol=1e-6)
+
+        # row-valued tuples (int: exact)
+        rval = jnp.asarray(rng.integers(-9, 9, (m, 3)), jnp.int32)
+        want = np.asarray(execute_reduce(
+            idx, rval, out_size=n, op="add", method="fused"))
+        for K in (1, 2, 4):
+            got = np.asarray(shard_reduce_stream(
+                idx, rval, out_size=n, mesh=mesh, op="add", pipeline_chunks=K))
+            assert np.array_equal(got, want), K
+
+        # K > m_local clamps to the chunk layout instead of tracing junk
+        tiny_i = jnp.asarray([3, 1, 3, 0], jnp.int32)
+        tiny_v = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        want = np.asarray(execute_reduce(
+            tiny_i, tiny_v, out_size=5, op="add", method="fused"))
+        got = np.asarray(shard_reduce_stream(
+            tiny_i, tiny_v, out_size=5, mesh=mesh, op="add",
+            pipeline_chunks=4))
+        assert np.array_equal(got, want)
+        print("OK")
+    """)
+
+
+def test_shard_build_csr_chunk_order_stability_8dev():
+    """Neighbor order is EL order within every vertex — including across
+    chunk boundaries: a chunked exchange naively concatenated would
+    interleave (chunk, source) and scramble duplicates. The oracle match
+    must be exact at every K, packed or not."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import COO, make_stream_mesh
+        from repro.core.distributed_pb import shard_build_csr
+        from repro.core.neighbor_populate import build_csr_oracle
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        rng = np.random.default_rng(3)
+        n, m = 97, 1201
+        # skewed + duplicate-heavy: vertex 0 owns ~1/3 of the edges and
+        # repeats destinations, so any order scramble is visible
+        src = rng.integers(0, n, m)
+        src[: m // 3] = 0
+        dst = rng.integers(0, 7, m)  # few distinct values => duplicates
+        coo = COO(jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32), n)
+        want = build_csr_oracle(coo)
+        for K in (1, 2, 4):
+            for packed in (True, False):
+                got = shard_build_csr(
+                    coo, mesh=mesh, pipeline_chunks=K, packed=packed)
+                assert np.array_equal(
+                    np.asarray(got.offsets), np.asarray(want.offsets)), (K, packed)
+                assert np.array_equal(
+                    np.asarray(got.neighs), np.asarray(want.neighs)), (K, packed)
+        print("OK")
+    """)
+
+
+def test_overflow_adversarial_skew_8dev():
+    """Adversarially skewed streams that blow a too-small capacity must
+    (a) raise the overflow flag instead of silently dropping tuples,
+    (b) rerun at the always-safe capacity and return the exact result,
+    (c) surface the event on the executor's decision log."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import PBExecutor, make_stream_mesh
+        from repro.core.distributed_pb import shard_reduce_stream_info
+        from repro.core.executor import execute_reduce
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        m, n = 1600, 800
+        # every tuple lands on shard 0: per-destination segments hold the
+        # WHOLE local stream, so any capacity below chunk_len overflows
+        idx = jnp.asarray(np.zeros(m), jnp.int32)
+        val = jnp.asarray(np.arange(m) % 7, jnp.int32)
+        want = np.asarray(execute_reduce(
+            idx, val, out_size=n, op="add", method="fused"))
+
+        for K in (1, 2, 4):
+            out, info = shard_reduce_stream_info(
+                idx, val, out_size=n, mesh=mesh, op="add", capacity=8,
+                pipeline_chunks=K)
+            assert info["overflow"] and info["fallback"], (K, info)
+            assert info["capacity"] == info["safe_capacity"], info
+            assert np.array_equal(np.asarray(out), want), K
+
+        # the skew estimator itself never overflows here: full-coverage
+        # sample sees the 100% owner-0 mass and picks the safe capacity
+        out, info = shard_reduce_stream_info(
+            idx, val, out_size=n, mesh=mesh, op="add")
+        assert not info["overflow"], info
+        assert info["capacity"] == info["safe_capacity"], info
+        assert np.array_equal(np.asarray(out), want)
+
+        # executor path: the overflow fallback lands on the decision log
+        ex = PBExecutor()
+        got = ex.shard_reduce_stream(
+            idx, val, out_size=n, mesh=mesh, op="add", capacity=8)
+        assert np.array_equal(np.asarray(got), want)
+        last = ex.decision_log[-1]
+        assert last["overflow"] is True, last
+        assert last["capacity_source"] == "overflow-fallback", last
+        assert last["mesh"] == {"shard": 8}, last
+        print("OK")
+    """)
+
+
+def test_packed_exchange_matches_two_collective_8dev():
+    """The packed single-buffer all_to_all (index bitcast into a value
+    lane) is bit-identical to the two-collective path — for float32 and
+    int32, scalar and row values — and wider dtypes that cannot pack
+    fall back to two collectives transparently."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import make_stream_mesh, shard_reduce_stream
+        from repro.core.distributed_pb import can_pack
+
+        assert can_pack(jnp.float32) and can_pack(jnp.int32)
+        assert not can_pack(jnp.int16) and not can_pack(jnp.float64)
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        rng = np.random.default_rng(11)
+        m, n = 1999, 333
+        idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        cases = [
+            (jnp.asarray(rng.standard_normal(m), jnp.float32), "add"),
+            (jnp.asarray(rng.standard_normal(m), jnp.float32), "min"),
+            (jnp.asarray(rng.integers(-99, 99, m), jnp.int32), "add"),
+            (jnp.asarray(rng.standard_normal((m, 2)), jnp.float32), "max"),
+        ]
+        for K in (1, 2):
+            for val, op in cases:
+                a = np.asarray(shard_reduce_stream(
+                    idx, val, out_size=n, mesh=mesh, op=op,
+                    pipeline_chunks=K, packed=True))
+                b = np.asarray(shard_reduce_stream(
+                    idx, val, out_size=n, mesh=mesh, op=op,
+                    pipeline_chunks=K, packed=False))
+                assert np.array_equal(a, b), (op, K, val.dtype)
+
+        # unpackable dtype: packed=True silently uses two collectives
+        ival = jnp.asarray(rng.integers(0, 99, m), jnp.int16)
+        a = np.asarray(shard_reduce_stream(
+            idx, ival, out_size=n, mesh=mesh, op="add", packed=True))
+        b = np.asarray(shard_reduce_stream(
+            idx, ival, out_size=n, mesh=mesh, op="add", packed=False))
+        assert np.array_equal(a, b)
+        print("OK")
+    """)
+
+
+def test_executor_pipeline_decision_8dev():
+    """The executor's pipeline_chunks axis: decide() stamps K on the
+    decision (1 on smoke-sized streams per the overlap model), autotune
+    measures the K sweep and persists it under the :pipeline cache key,
+    and the decision-log entry carries the §13 fields."""
+    run_py("""
+        import tempfile
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import PBExecutor, make_stream_mesh
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        rng = np.random.default_rng(5)
+        m, n = 4000, 500
+        idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        val = jnp.asarray(rng.standard_normal(m), jnp.float32)
+
+        ex = PBExecutor(cache_dir=tempfile.mkdtemp())
+        ex.shard_reduce_stream(idx, val, out_size=n, mesh=mesh, op="add")
+        last = ex.decision_log[-1]
+        assert last["kind"] == "reduce" and last["mesh"] == {"shard": 8}
+        for key in ("pipeline_chunks", "capacity", "overflow", "packed",
+                    "capacity_source"):
+            assert key in last, (key, last)
+        assert last["pipeline_chunks"] >= 1
+        assert last["capacity_source"] == "estimated"
+
+        # autotune: measured K sweep persisted under the :pipeline key
+        tune_dir = tempfile.mkdtemp()
+        ex2 = PBExecutor(autotune=True, cache_dir=tune_dir)
+        ex2.shard_reduce_stream(idx, val, out_size=n, mesh=mesh, op="add")
+        pipe_keys = [k for k in ex2.cache.mem if k.endswith(":pipeline")]
+        assert pipe_keys, list(ex2.cache.mem)
+        rec = ex2.cache.mem[pipe_keys[0]]
+        assert rec["pipeline_chunks"] in (1, 2, 4), rec
+        assert set(rec["timings_us"]) == {"1", "2", "4"}, rec
+        assert ex2.decision_log[-1]["pipeline_chunks"] == rec["pipeline_chunks"]
+
+        # the measured K is reloaded (no re-tuning) from the persisted
+        # cache on the same topology+shape key
+        ex3 = PBExecutor(cache_dir=tune_dir)
+        ex3.shard_reduce_stream(idx, val, out_size=n, mesh=mesh, op="add")
+        assert ex3.decision_log[-1]["pipeline_chunks"] == rec["pipeline_chunks"]
+        print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# In-process: topology-free invariants of the §13 pieces.
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_layout_invariants():
+    from repro.core.distributed_pb import _chunk_layout
+
+    for m_local in (0, 1, 2, 3, 7, 8, 100, 1001):
+        for chunks in (1, 2, 3, 4, 8, 1000):
+            k, chunk_len = _chunk_layout(m_local, chunks)
+            assert 1 <= k <= max(1, m_local)
+            assert k <= chunks
+            assert k * chunk_len >= m_local  # chunks cover the stream
+            assert chunk_len >= 1
+
+
+def test_estimate_capacity_bounds():
+    from repro.core.distributed_pb import estimate_capacity, shard_range_for
+
+    n, n_dev = 4096, 8
+    rng = np.random.default_rng(0)
+    uniform = rng.integers(0, n, 1 << 14)
+    skewed = np.zeros(1 << 14, dtype=np.int64)  # all owned by shard 0
+    for chunks in (1, 2, 4):
+        m_local = -(-uniform.shape[0] // n_dev)
+        chunk_len = -(-m_local // chunks)
+        cap_u = estimate_capacity(
+            uniform, out_size=n, n_dev=n_dev, chunks=chunks)
+        cap_s = estimate_capacity(
+            skewed, out_size=n, n_dev=n_dev, chunks=chunks)
+        assert 1 <= cap_u <= chunk_len
+        # uniform: ~1/n_dev of a chunk + slack — far below the safe cap
+        assert cap_u < chunk_len // 2
+        # total skew: the estimator picks the always-safe chunk length
+        assert cap_s == chunk_len
+    # degenerate inputs never crash or return 0
+    assert estimate_capacity(
+        np.zeros(0, np.int64), out_size=n, n_dev=n_dev) == 1
+    assert estimate_capacity(uniform, out_size=n, n_dev=1) == 1
+    # out-of-range (sentinel) indices are ignored by the histogram
+    with_sentinels = np.concatenate([uniform, np.full(100, n)])
+    cap = estimate_capacity(with_sentinels, out_size=n, n_dev=n_dev)
+    assert 1 <= cap <= -(-with_sentinels.shape[0] // n_dev)
+
+
+def test_overlap_model_properties():
+    from repro.roofline import ShardedPBStreamRoofline
+
+    big = ShardedPBStreamRoofline(num_tuples=1 << 28, num_indices=1 << 24, n_dev=8)
+    tiny = ShardedPBStreamRoofline(num_tuples=1 << 10, num_indices=1 << 8, n_dev=8)
+    for rl in (big, tiny):
+        # K=1 IS the sequential schedule; deeper pipelines approach but
+        # never beat the fully-overlapped floor
+        assert rl.t_pipelined(1) == rl.t_sequential
+        prev = rl.t_sequential
+        for k in (2, 4, 8):
+            t = rl.t_pipelined(k)
+            assert rl.t_step <= t <= prev + 1e-18
+            prev = t
+            assert 1.0 <= rl.overlap_efficiency(k) <= 2.0
+            assert 0.0 <= rl.hidden_exchange_fraction(k) <= 1.0
+        assert rl.hidden_exchange_fraction(1) == 0.0
+    # the launch-overhead term: tiny streams pick K=1, big streams K>1
+    assert tiny.best_pipeline_chunks() == 1
+    assert big.best_pipeline_chunks() > 1
+    # t_step (the existing speedup-ceiling denominator) is unchanged
+    assert big.t_step == max(big.t_hbm, big.t_ici)
+
+
+def test_default_pipeline_chunks():
+    from repro.core.distributed_pb import default_pipeline_chunks
+
+    assert default_pipeline_chunks(1 << 10, 1 << 8, 8) == 1  # tiny: K=1
+    assert default_pipeline_chunks(1 << 28, 1 << 24, 8) > 1
+    assert default_pipeline_chunks(1 << 28, 1 << 24, 1) == 1  # no mesh
+    assert default_pipeline_chunks(0, 1 << 8, 8) == 1
+
+
+def test_traffic_chunk_counters():
+    from repro.core import traffic
+
+    m, n_dev = 1 << 20, 8
+    mono = traffic.sharded_exchange_bytes_per_device(m, n_dev)
+    # ragged (exact) modeling: chunking moves the same bytes in more
+    # launches — the pipelined total is invariant in K
+    for k in (1, 2, 4):
+        per_chunk = traffic.sharded_exchange_chunk_bytes_per_device(m, n_dev, k)
+        total = traffic.sharded_pipelined_exchange_bytes_per_device(m, n_dev, k)
+        assert total == pytest.approx(k * per_chunk)
+        assert total == pytest.approx(mono)
+    # per-chunk padding: capacity rounding can only add bytes
+    cap = -(-(m // n_dev) // 4) // n_dev + 1
+    padded = traffic.sharded_pipelined_exchange_bytes_per_device(
+        m, n_dev, 4, padded_capacity=cap)
+    assert padded >= traffic.sharded_pipelined_exchange_bytes_per_device(
+        m, n_dev, 4)
+    # one device: nothing crosses the wire
+    assert traffic.sharded_exchange_chunk_bytes_per_device(m, 1, 4) == 0.0
+    # packing halves collective launches
+    assert traffic.exchange_collective_launches(4, packed=True) == 4
+    assert traffic.exchange_collective_launches(4, packed=False) == 8
+    assert traffic.exchange_collective_launches(1, packed=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis leg (skipped when hypothesis is absent, like test_property).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SET = settings(max_examples=50, deadline=None)
+
+    @SET
+    @given(
+        m_local=st.integers(0, 10_000),
+        chunks=st.integers(1, 64),
+    )
+    def test_chunk_layout_covers_stream(m_local, chunks):
+        from repro.core.distributed_pb import _chunk_layout
+
+        k, chunk_len = _chunk_layout(m_local, chunks)
+        assert 1 <= k <= max(1, m_local) and k <= chunks
+        assert k * chunk_len >= m_local  # chunks cover the stream
+        # bounded padding: covering never doubles the stream (so an
+        # all-sentinel trailing chunk stays a constant-factor cost)
+        assert k * chunk_len <= 2 * max(1, m_local)
+
+    @SET
+    @given(
+        idx=st.lists(st.integers(0, 499), min_size=1, max_size=2000),
+        n_dev=st.sampled_from([2, 4, 8]),
+        chunks=st.sampled_from([1, 2, 4]),
+    )
+    def test_estimate_capacity_safe_and_sufficient(idx, n_dev, chunks):
+        """The estimate never exceeds the always-safe chunk length, and
+        at full sample coverage (stride 1 for these sizes) it bounds the
+        true heaviest per-destination segment of a chunk-balanced
+        stream scaled by the slack factor."""
+        from repro.core.distributed_pb import estimate_capacity
+
+        arr = np.asarray(idx, np.int64)
+        m_local = -(-arr.shape[0] // n_dev)
+        chunk_len = -(-m_local // chunks)
+        cap = estimate_capacity(
+            arr, out_size=500, n_dev=n_dev, chunks=chunks)
+        assert 1 <= cap <= chunk_len
+        # a single-owner stream must always get the safe capacity
+        cap1 = estimate_capacity(
+            np.zeros_like(arr), out_size=500, n_dev=n_dev, chunks=chunks)
+        assert cap1 == chunk_len
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_pipeline_hypothesis_leg():
+        pass
