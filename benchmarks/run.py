@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.fig6_breakdown",
     "benchmarks.fig7_scaling",
     "benchmarks.fig8_traversal",
+    "benchmarks.fig9_spmm",
     "benchmarks.serving_load",
     "benchmarks.moe_dispatch",
     "benchmarks.embed_grad",
@@ -40,6 +41,7 @@ SMOKE_MODULES = [
     "benchmarks.fig6_breakdown",
     "benchmarks.fig7_scaling",
     "benchmarks.fig8_traversal",
+    "benchmarks.fig9_spmm",
     "benchmarks.serving_load",
     "benchmarks.executor_autotune",
     "benchmarks.moe_dispatch",

@@ -35,6 +35,7 @@ REQUIRED_PREFIXES = (
     "fig7/overlap/",
     "fig7/chunks/",
     "fig8/",
+    "fig9/",
     "serving/",
     "executor/",
     "moe/",

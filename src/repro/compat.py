@@ -32,6 +32,29 @@ def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
+try:  # the supported home since jax 0.2.x — jax.ops.segment_sum is a
+    # legacy alias dropped from modern releases
+    from jax.ops import segment_sum as _segment_sum  # type: ignore[attr-defined]
+except ImportError:
+    from jax.lax import segment_sum as _segment_sum  # type: ignore[attr-defined]
+
+
+def segment_sum(data, segment_ids, *, num_segments, indices_are_sorted=False):
+    """``segment_sum`` from wherever the installed jax exposes it.
+
+    ``core/pagerank.py`` used the ``jax.ops.segment_sum`` spelling, which
+    newer jax removes outright; every in-repo caller (and the fig9 SpMM
+    baseline) goes through this shim so the repo keeps one import site to
+    update if the alias moves again.
+    """
+    return _segment_sum(
+        data,
+        segment_ids,
+        num_segments=num_segments,
+        indices_are_sorted=indices_are_sorted,
+    )
+
+
 def cost_analysis(compiled) -> dict:
     """Normalize ``Compiled.cost_analysis()`` across jax versions.
 
@@ -45,4 +68,4 @@ def cost_analysis(compiled) -> dict:
     return ca or {}
 
 
-__all__ = ["shard_map", "cost_analysis"]
+__all__ = ["shard_map", "cost_analysis", "segment_sum"]

@@ -180,29 +180,57 @@ def _fused_reduce_jnp(
     op: str,
     block: int = 2048,
     sorted_within: Optional[int] = None,
+    in_bounds: bool = False,
 ) -> jnp.ndarray:
     """Fused fallback off-TPU: one blockwise sweep, each block
     segment-reduced straight into the dense output (a ``lax.scan`` whose
     carry IS the accumulator — the jnp rendering of the VMEM-resident
     accumulator tile in kernels/fused.py). The binned intermediate is
     never built. ``sorted_within <= 1`` hands XLA the elementwise
-    sortedness fact when the caller actually guarantees it.
+    sortedness fact when the caller actually guarantees it, and
+    ``in_bounds=True`` is the caller's promise that every index lies in
+    ``[0, out_size)`` (a CSR/CSC-derived stream guarantees this by
+    construction), letting the scatter skip per-update bounds masking.
+    The default keeps the drop-out-of-range semantics every other method
+    shares.
     """
+    vshape = pb.value_block_shape(values)  # raises on unsupported ranks
     m = indices.shape[0]
     ident = pb.reduce_identity(op, values.dtype)
-    out0 = jnp.full((out_size,) + values.shape[1:], ident, values.dtype)
+    out0 = jnp.full((out_size,) + vshape, ident, values.dtype)
     if m == 0:
         return out0
     srt = sorted_within is not None and sorted_within <= 1
     nblocks = -(-m // block)
+    if nblocks == 1:
+        # whole stream is one accumulator sweep: skip the scan (and its
+        # padding) entirely — the common smoke-scale case, and the shape
+        # fig9's per-iteration fused timings measure
+        if op == "add" and srt and in_bounds:
+            # a binned (elementwise-sorted, in-bounds) add stream is a
+            # segmented reduction, not a scatter: XLA's sorted
+            # segment-sum walks the output sequentially — the jnp
+            # rendering of what consuming the binned stream buys
+            # (bit-exact with the scatter form: both accumulate in
+            # stream order within a segment)
+            from repro import compat
+
+            return compat.segment_sum(
+                values, indices, num_segments=out_size,
+                indices_are_sorted=True,
+            ).astype(values.dtype)
+        upd = out0.at[indices]
+        apply = {"add": upd.add, "min": upd.min, "max": upd.max}[op]
+        mode = "promise_in_bounds" if in_bounds else "drop"
+        return apply(values, indices_are_sorted=srt, mode=mode)
     pad = nblocks * block - m
     # padding indices routed out of bounds and dropped by the scatter
     idx_p = jnp.pad(indices, (0, pad), constant_values=out_size).reshape(
         nblocks, block
     )
-    pad_width = [(0, pad)] + [(0, 0)] * (values.ndim - 1)
+    pad_width = [(0, pad)] + [(0, 0)] * len(vshape)
     val_p = jnp.pad(values, pad_width, constant_values=0).reshape(
-        (nblocks, block) + values.shape[1:]
+        (nblocks, block) + vshape
     )
 
     def step(out, blk):
@@ -234,6 +262,8 @@ def execute_reduce(
     interpret: Optional[bool] = None,
     use_pallas: bool = False,
     sorted_within: Optional[int] = None,
+    f_tile: Optional[int] = None,
+    in_bounds: bool = False,
 ) -> jnp.ndarray:
     """Reduce one (indices, values) stream to a dense (out_size, ...) array.
 
@@ -244,6 +274,13 @@ def execute_reduce(
     when ``use_pallas`` is set or the backend compiles it (a real TPU:
     ``interpret`` resolves False), and the blockwise jnp sweep otherwise. Only commutative ops are accepted: order-sensitive
     consumers must use ``bin_stream`` (DESIGN.md §8).
+
+    Row-block ``(m, F)`` values flow through every method (DESIGN.md
+    §14): the fused Pallas realization is the feature-tiled row-block
+    kernel (``f_tile`` columns per stream sweep), the jnp sweep carries
+    rows natively, and the two-phase Bin-Read reduce always has.
+    ``in_bounds=True`` is the caller's promise that indices lie in
+    ``[0, out_size)``, unlocking the maskless scatter fast path.
     """
     if op not in REDUCE_OPS:
         raise ValueError(
@@ -258,21 +295,48 @@ def execute_reduce(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if method == "fused":
-        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        vshape = pb.value_block_shape(values)  # raises on unsupported ranks
+        flat = vshape == ()
+        feat = vshape[0] if vshape else 0
         # the Pallas kernel runs when explicitly requested OR compiled
         # (non-interpret = a real TPU backend); CPU containers default to
         # the jnp sweep, which is the faster interpret-mode realization
         r = bin_range or max(1, min(512, out_size))
         nb = num_bins or -(-out_size // r)
-        kernel_fits = flat and (
-            nb * r * jnp.dtype(values.dtype).itemsize <= _FUSED_KERNEL_MAX_ACC_BYTES
-            and nb <= _FUSED_KERNEL_MAX_BINS
-        )
+        isz = jnp.dtype(values.dtype).itemsize
+        cap = 512
+        if flat:
+            kernel_fits = (
+                nb * r * isz <= _FUSED_KERNEL_MAX_ACC_BYTES
+                and nb <= _FUSED_KERNEL_MAX_BINS
+            )
+        else:
+            # row-block accumulator + per-bin C-Buffer row scratch, both
+            # sized at the F-tile actually resident per sweep
+            ft = max(1, min(feat, f_tile or feat))
+            kernel_fits = feat > 0 and (
+                nb * (r + cap) * ft * isz <= _FUSED_KERNEL_MAX_ACC_BYTES
+                and nb <= _FUSED_KERNEL_MAX_BINS
+            )
         if (use_pallas or not interpret) and kernel_fits and indices.shape[0] > 0:
-            from repro.kernels.fused import cobra_bin_accumulate_pallas
-
             blk = min(block, 512)
-            return cobra_bin_accumulate_pallas(
+            if flat:
+                from repro.kernels.fused import cobra_bin_accumulate_pallas
+
+                return cobra_bin_accumulate_pallas(
+                    indices,
+                    values,
+                    num_indices=out_size,
+                    bin_range=r,
+                    num_bins=nb,
+                    op=op,
+                    block=blk,
+                    cap=cap,  # >= blk by construction (kernel asserts)
+                    interpret=interpret,
+                )
+            from repro.kernels.fused import cobra_bin_accumulate_rows_pallas
+
+            return cobra_bin_accumulate_rows_pallas(
                 indices,
                 values,
                 num_indices=out_size,
@@ -280,11 +344,13 @@ def execute_reduce(
                 num_bins=nb,
                 op=op,
                 block=blk,
-                cap=512,  # >= blk by construction (kernel asserts)
+                cap=cap,
+                f_tile=ft,
                 interpret=interpret,
             )
         return _fused_reduce_jnp(
-            indices, values, out_size, op, block=block, sorted_within=sorted_within
+            indices, values, out_size, op, block=block,
+            sorted_within=sorted_within, in_bounds=in_bounds,
         )
     r = bin_range or max(1, min(512, out_size))
     nb = num_bins or -(-out_size // r)
@@ -421,7 +487,12 @@ class BinningDecision:
     (DESIGN.md §13): 1 everywhere except mesh-sharded reduce decisions,
     where the roofline overlap model (or a measured sweep under the
     topology-extended ``:pipeline`` cache key) picks how many
-    double-buffered chunks the owner exchange splits into."""
+    double-buffered chunks the owner exchange splits into.
+
+    ``f_tile`` is the row-block feature-tile width (DESIGN.md §14): 0 for
+    scalar-lane streams; for ``(m, F)`` row-block reduce decisions the
+    number of feature columns resident per fused stream sweep (the
+    stream is re-read ``ceil(F / f_tile)`` times)."""
 
     method: str
     bin_range: int
@@ -429,9 +500,11 @@ class BinningDecision:
     plan: Optional[CobraPlan]
     source: str  # analytic | fallback-table | autotuned | cache
     pipeline_chunks: int = 1
+    f_tile: int = 0
 
     def describe(self) -> str:
-        return f"{self.method}@r{self.bin_range}[{self.source}]"
+        ft = f"/f{self.f_tile}" if self.f_tile else ""
+        return f"{self.method}@r{self.bin_range}{ft}[{self.source}]"
 
 
 def _bucket(x: int) -> int:
@@ -465,7 +538,9 @@ _FALLBACK_TABLE = {
 # entries under an old key format would never be looked up again, yet
 # merge-on-save would preserve them forever — versioning discards the
 # whole stale file instead. v2: reduce keys bucket stream_len (§11.3).
-_CACHE_SCHEMA_VERSION = 2
+# v3: row-block reduce keys carry the feature dim F (§14) — a method
+# measured on a scalar lane is not evidence about an F-wide row stream.
+_CACHE_SCHEMA_VERSION = 3
 
 
 class _AutotuneCache:
@@ -603,7 +678,7 @@ def _jitted_reduce_batched(
 @functools.lru_cache(maxsize=256)
 def _jitted_reduce(
     out_size, bin_range, num_bins, method, op, block, interpret, plan, use_pallas,
-    sorted_within,
+    sorted_within, f_tile=None, in_bounds=False,
 ):
     def f(idx, val):
         return execute_reduce(
@@ -619,6 +694,8 @@ def _jitted_reduce(
             interpret=interpret,
             use_pallas=use_pallas,
             sorted_within=sorted_within,
+            f_tile=f_tile,
+            in_bounds=in_bounds,
         )
 
     return jax.jit(f)
@@ -672,6 +749,7 @@ class PBExecutor:
         kind: str = "bin",
         op: str = "add",
         mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
+        feature_dim: int = 0,
     ) -> str:
         # bin_range is part of the key: a method measured at one range is
         # not evidence about another (counting's cost is ~linear in the
@@ -701,6 +779,15 @@ class PBExecutor:
         )
         if kind != "bin":
             base = f"{base}:{kind}:{op}"
+            if feature_dim > 1:
+                # row-block streams: the feature dim scales the apply
+                # traffic AND the accumulator footprint (DESIGN.md §14),
+                # so F-wide decisions never share scalar-lane entries.
+                # F=1 shares the scalar key on purpose: one value per
+                # index is the scalar economics (same accumulator bytes,
+                # f_tile trivially 1), and serving warmup enumerates
+                # scalar keys only.
+                base = f"{base}:f{feature_dim}"
         return f"{base}:r{bin_range}" if bin_range else base
 
     def _candidates(self, flat_values: bool, kind: str = "bin") -> Tuple[str, ...]:
@@ -752,15 +839,48 @@ class PBExecutor:
         return num_indices * value_bytes <= self.hw.fast_levels[-1] // 2
 
     def analytic_reduce_method(
-        self, num_indices: int, stream_len: int, bin_range: Optional[int] = None
+        self,
+        num_indices: int,
+        stream_len: int,
+        bin_range: Optional[int] = None,
+        value_bytes: int = 4,
     ) -> str:
         """DESIGN.md §8: the fused single sweep strictly halves stream
         bytes whenever its accumulator fits the fast level, so it wins
         every bandwidth-bound case; oversized domains fall back to the
-        two-phase tree at §3.1."""
-        if self.fused_fits(num_indices):
+        two-phase tree at §3.1. ``value_bytes`` is the per-INDEX
+        accumulator cost — a row-block stream passes ``F * itemsize``,
+        but feature tiling (§14) caps what must actually be resident, so
+        legality is checked at the chosen F-tile, never at full F."""
+        if self.fused_fits(num_indices, value_bytes):
             return "fused"
         return self.analytic_method(num_indices, stream_len, bin_range)
+
+    def choose_f_tile(
+        self,
+        feature_dim: int,
+        num_indices: int,
+        itemsize: int = 4,
+        cap: int = 512,
+    ) -> int:
+        """F-tiling policy (DESIGN.md §14): the widest power-of-two slab
+        of feature columns whose VMEM-resident footprint — the
+        ``num_indices``-wide accumulator tile plus the per-bin C-Buffer
+        row scratch — fits half the fast level, clamped to the 128-lane
+        register width. The F-tile loop is OUTERMOST in the kernel, so
+        the binned index stream is re-streamed ``ceil(F / f_tile)``
+        times; wider tiles amortize those re-reads, which is why the
+        policy maximizes rather than minimizes. Returns 0 for scalar
+        (``feature_dim == 0``) streams."""
+        if feature_dim <= 0:
+            return 0
+        budget = self.hw.fast_levels[-1] // 2
+        # per feature column: one accumulator slot per owned index plus
+        # one C-Buffer slot per (bin, lane) — bins ~ num_indices / range
+        per_col = max(1, num_indices + cap * max(1, num_indices // 512)) * itemsize
+        max_ft = max(1, budget // per_col)
+        ft = min(feature_dim, max_ft, 128)
+        return 1 << (int(ft).bit_length() - 1)  # power-of-two slab
 
     def decide(
         self,
@@ -773,6 +893,7 @@ class PBExecutor:
         kind: str = "bin",
         op: str = "add",
         mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
+        feature_dim: int = 0,
     ) -> BinningDecision:
         """Pick (method, bin_range, plan) for a stream shape.
 
@@ -783,14 +904,26 @@ class PBExecutor:
         is the value dtype, and ``op`` keys the cache entry.
         ``mesh_shape`` (tuples of (axis, size)) keys sharded decisions by
         device topology; single-device keys still carry the process's
-        device count (DESIGN.md §9).
+        device count (DESIGN.md §9). ``feature_dim`` is F for row-block
+        ``(m, F)`` value streams (0 = scalar lane): it extends the cache
+        key, scales the fused-legality check, and stamps the decision's
+        ``f_tile`` axis (DESIGN.md §14).
         """
         key = self._key(
-            num_indices, stream_len, dtype, bin_range, kind, op, mesh_shape
+            num_indices, stream_len, dtype, bin_range, kind, op, mesh_shape,
+            feature_dim,
         )
         d = self._decide_uncached(
-            key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
+            key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op,
+            feature_dim,
         )
+        if kind == "reduce" and feature_dim:
+            d = _dc_replace(
+                d,
+                f_tile=self.choose_f_tile(
+                    feature_dim, num_indices, jnp.dtype(dtype).itemsize
+                ),
+            )
         if mesh_shape and kind == "reduce":
             # the pipeline-depth axis of a sharded decision (DESIGN.md
             # §13): measured entry under the topology-extended key when
@@ -811,6 +944,9 @@ class PBExecutor:
         }
         if kind != "bin":
             entry["op"] = op
+        if feature_dim:
+            entry["feature_dim"] = feature_dim
+            entry["f_tile"] = d.f_tile
         if mesh_shape:
             entry["mesh"] = {a: s for a, s in mesh_shape}
             if kind == "reduce":
@@ -853,6 +989,7 @@ class PBExecutor:
         kind: str = "bin",
         op: str = "add",
         mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
+        feature_dim: int = 0,
     ) -> BinningDecision:
         """``decide`` when the caller passed ``None``/"auto", else the
         caller-forced method finalized at this shape — the one branch
@@ -863,11 +1000,21 @@ class PBExecutor:
             return self.decide(
                 num_indices, stream_len, dtype, bin_range=bin_range,
                 flat_values=flat_values, kind=kind, op=op, mesh_shape=mesh_shape,
+                feature_dim=feature_dim,
             )
-        return self._finalize(method, num_indices, bin_range, "caller")
+        d = self._finalize(method, num_indices, bin_range, "caller")
+        if kind == "reduce" and feature_dim:
+            d = _dc_replace(
+                d,
+                f_tile=self.choose_f_tile(
+                    feature_dim, num_indices, jnp.dtype(dtype).itemsize
+                ),
+            )
+        return d
 
     def _decide_uncached(
-        self, key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op
+        self, key, num_indices, stream_len, dtype, bin_range, flat_values, kind, op,
+        feature_dim: int = 0,
     ) -> BinningDecision:
         hit = self.cache.get(key)
         if hit is not None and hit.get("method") in self._candidates(flat_values, kind):
@@ -875,7 +1022,7 @@ class PBExecutor:
         if self.autotune and stream_len > 0:
             entry = self.measure_methods(
                 num_indices, stream_len, dtype, bin_range, flat_values, kind=kind,
-                op=op,
+                op=op, feature_dim=feature_dim,
             )
             self.cache.put(key, entry)
             return self._finalize(entry["method"], num_indices, bin_range, "autotuned")
@@ -888,11 +1035,16 @@ class PBExecutor:
             m = _FALLBACK_TABLE.get(tkey)
             if m is not None and m in self._candidates(flat_values, kind):
                 return self._finalize(m, num_indices, bin_range, "fallback-table")
-        analytic = (
-            self.analytic_reduce_method(num_indices, stream_len, bin_range)
-            if kind == "reduce"
-            else self.analytic_method(num_indices, stream_len, bin_range)
-        )
+        if kind == "reduce":
+            # fused legality at the F-TILE the policy would pick, not at
+            # full F: tiling is exactly what keeps wide rows resident
+            isz = jnp.dtype(dtype).itemsize
+            ft = self.choose_f_tile(feature_dim, num_indices, isz)
+            analytic = self.analytic_reduce_method(
+                num_indices, stream_len, bin_range, value_bytes=max(1, ft) * isz
+            )
+        else:
+            analytic = self.analytic_method(num_indices, stream_len, bin_range)
         return self._finalize(analytic, num_indices, bin_range, "analytic")
 
     # -- pipeline depth (sharded exchange, DESIGN.md §13) ------------------
@@ -987,25 +1139,35 @@ class PBExecutor:
         reps: int = 3,
         kind: str = "bin",
         op: str = "add",
+        feature_dim: int = 0,
     ) -> dict:
         """Time every candidate method on a synthetic stream of this
         shape; returns ``{"method": best, "timings_us": {...}}``. The
         measured answer to the paper's §3 compromise — used by ``decide``
         when autotuning and by benchmarks/executor_autotune.py.
         ``kind="reduce"`` times the dense-reduction pipelines (including
-        the fused single sweep) instead of bare binning."""
+        the fused single sweep) instead of bare binning; ``feature_dim``
+        probes with (m, F) row-block values so a row decision is measured
+        on row traffic (DESIGN.md §14)."""
         rng = np.random.default_rng(num_indices * 1_000_003 + stream_len)
         idx = jnp.asarray(
             rng.integers(0, max(1, num_indices), stream_len), jnp.int32
         )
-        val = jnp.arange(stream_len, dtype=dtype)
+        if feature_dim:
+            val = jnp.arange(stream_len * feature_dim, dtype=dtype).reshape(
+                stream_len, feature_dim
+            )
+        else:
+            val = jnp.arange(stream_len, dtype=dtype)
+        isz = jnp.dtype(dtype).itemsize
+        ftile = self.choose_f_tile(feature_dim, num_indices, isz) or None
         timings = {}
         for method in self._candidates(flat_values, kind):
             d = self._finalize(method, num_indices, bin_range, "probe")
             if kind == "reduce":
                 fn = _jitted_reduce(
                     num_indices, d.bin_range, d.num_bins, method, op, self.block,
-                    self.interpret, d.plan, self.use_pallas, None,
+                    self.interpret, d.plan, self.use_pallas, None, ftile, False,
                 )
             else:
                 fn = _jitted_binning(
@@ -1072,6 +1234,11 @@ class PBExecutor:
         # per-stream values are 1-D iff the batched array is (B, m);
         # (B, m, d) row values are NOT flat — the decision must know
         flat = isinstance(values, jnp.ndarray) and values.ndim == 2
+        feat = (
+            int(values.shape[2])
+            if isinstance(values, jnp.ndarray) and values.ndim == 3
+            else 0
+        )
         if method in (None, "auto"):
             d = self.decide(
                 num_indices,
@@ -1084,20 +1251,25 @@ class PBExecutor:
                 # only the pure-XLA methods vmap; clamp to sort AND log
                 # the clamp under its own source tag so decision_log /
                 # BENCH rows report what actually ran, not the pre-clamp
-                # choice
+                # choice. Row-valued clamps also record the requested F
+                # and the F-tile the fused path WOULD have used, so an
+                # autotune regression is diagnosable from the log alone
+                # (DESIGN.md §14).
                 d = self._finalize(
                     "sort", num_indices, bin_range, f"{d.source}+batch-clamp"
                 )
-                self._log_decision(
-                    {
-                        "kind": "bin",
-                        "num_indices": num_indices,
-                        "stream_len": int(indices.shape[1]),
-                        "method": d.method,
-                        "bin_range": d.bin_range,
-                        "source": d.source,
-                    }
-                )
+                entry = {
+                    "kind": "bin",
+                    "num_indices": num_indices,
+                    "stream_len": int(indices.shape[1]),
+                    "method": d.method,
+                    "bin_range": d.bin_range,
+                    "source": d.source,
+                }
+                if feat:
+                    entry["feature_dim"] = feat
+                    entry["f_tile"] = self.choose_f_tile(feat, num_indices)
+                self._log_decision(entry)
         else:
             d = self._finalize(method, num_indices, bin_range, "caller")
         return bin_streams_batched(
@@ -1119,6 +1291,7 @@ class PBExecutor:
         bin_range: Optional[int] = None,
         method: Optional[str] = None,
         sorted_within: Optional[int] = None,
+        in_bounds: bool = False,
     ) -> jnp.ndarray:
         """Reduce one commutative stream to a dense (out_size, ...) array.
 
@@ -1128,7 +1301,13 @@ class PBExecutor:
         (DESIGN.md §8). ``method=None``/"auto" consults ``decide`` with
         the reduce candidate set; non-commutative ops are rejected (use
         ``bin_stream``). ``sorted_within`` is the caller's true order
-        guarantee (1 = elementwise sorted indices).
+        guarantee (1 = elementwise sorted indices); ``in_bounds`` its
+        promise that indices lie in ``[0, out_size)`` (CSR/CSC streams).
+
+        Row-block ``(m, F)`` values route through the feature-tiled
+        fused realization: ``decide`` keys on F, checks fused legality at
+        the chosen F-tile, and stamps ``f_tile`` on the decision
+        (DESIGN.md §14).
         """
         if op not in REDUCE_OPS:
             raise ValueError(
@@ -1136,9 +1315,15 @@ class PBExecutor:
                 f"got op={op!r}. Non-commutative consumers need the stable "
                 "two-phase path: bin_stream() + an order-aware Bin-Read."
             )
-        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        vshape = (
+            pb.value_block_shape(values)
+            if isinstance(values, (jnp.ndarray, np.ndarray))
+            else ()
+        )
+        flat = isinstance(values, jnp.ndarray) and vshape == ()
+        feat = vshape[0] if vshape else 0
+        vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
         if method in (None, "auto"):
-            vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
             d = self.decide(
                 out_size,
                 int(indices.shape[0]),
@@ -1147,9 +1332,17 @@ class PBExecutor:
                 flat_values=flat,
                 kind="reduce",
                 op=op,
+                feature_dim=feat,
             )
         else:
             d = self._finalize(method, out_size, bin_range, "caller")
+            if feat:
+                d = _dc_replace(
+                    d,
+                    f_tile=self.choose_f_tile(
+                        feat, out_size, jnp.dtype(vdtype).itemsize
+                    ),
+                )
         if not flat and d.method != "fused":
             # the two-phase Bin-Read reduce handles row values too, but
             # pallas binning is 1-D-only; route those to sort
@@ -1158,6 +1351,7 @@ class PBExecutor:
         fn = _jitted_reduce(
             out_size, d.bin_range, d.num_bins, d.method, op, self.block,
             self.interpret, d.plan, self.use_pallas, sorted_within,
+            d.f_tile or None, in_bounds,
         )
         return fn(indices, values)
 
@@ -1200,6 +1394,11 @@ class PBExecutor:
                 f"reduce_streams wants (B, m) indices, got {indices.shape}"
             )
         flat = isinstance(values, jnp.ndarray) and values.ndim == 2
+        feat = (
+            int(values.shape[2])
+            if isinstance(values, jnp.ndarray) and values.ndim == 3
+            else 0
+        )
         if method in (None, "auto"):
             vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
             d = self.decide(
@@ -1210,22 +1409,25 @@ class PBExecutor:
                 flat_values=flat,
                 kind="reduce",
                 op=op,
+                feature_dim=feat,
             )
             if d.method not in self.BATCHED_REDUCE_METHODS:
                 d = self._finalize(
                     "sort", out_size, bin_range, f"{d.source}+batch-clamp"
                 )
-                self._log_decision(
-                    {
-                        "kind": "reduce",
-                        "num_indices": out_size,
-                        "stream_len": int(indices.shape[1]),
-                        "method": d.method,
-                        "bin_range": d.bin_range,
-                        "source": d.source,
-                        "op": op,
-                    }
-                )
+                entry = {
+                    "kind": "reduce",
+                    "num_indices": out_size,
+                    "stream_len": int(indices.shape[1]),
+                    "method": d.method,
+                    "bin_range": d.bin_range,
+                    "source": d.source,
+                    "op": op,
+                }
+                if feat:
+                    entry["feature_dim"] = feat
+                    entry["f_tile"] = self.choose_f_tile(feat, out_size)
+                self._log_decision(entry)
         else:
             if method not in self.BATCHED_REDUCE_METHODS:
                 raise ValueError(
@@ -1296,7 +1498,13 @@ class PBExecutor:
             if capacity is not None
             else dpb.estimate_capacity(indices, out_size=out_size, n_dev=n_dev)
         ) if m > 0 else 1
-        flat = isinstance(values, jnp.ndarray) and values.ndim == 1
+        vshape = (
+            pb.value_block_shape(values)
+            if isinstance(values, (jnp.ndarray, np.ndarray))
+            else ()
+        )
+        flat = isinstance(values, jnp.ndarray) and vshape == ()
+        feat = vshape[0] if vshape else 0
         vdtype = values.dtype if hasattr(values, "dtype") else jnp.float32
         mesh_shape = tuple(sorted(mesh.shape.items()))
         entry: Optional[dict] = None
@@ -1310,6 +1518,7 @@ class PBExecutor:
                 kind="reduce",
                 op=op,
                 mesh_shape=mesh_shape,
+                feature_dim=feat,
             )
             entry = self._last_entry  # enriched with exchange facts below
         else:

@@ -26,6 +26,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.executor import get_default_executor
 from repro.core.graph import COO, CSR, degrees_from_coo, segment_ids_from_offsets
 
@@ -72,7 +73,7 @@ def _pr_pull(offsets_t, neighs_t, outdeg, num_nodes, num_edges, iters):
     def body(_, ranks):
         contrib = ranks / outdeg
         gathered = jnp.take(contrib, neighs_t)  # in-neighbor contributions
-        incoming = jax.ops.segment_sum(
+        incoming = compat.segment_sum(
             gathered, seg, num_segments=n, indices_are_sorted=True
         )
         return (1.0 - DAMP) / n + DAMP * incoming

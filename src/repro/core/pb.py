@@ -76,6 +76,34 @@ def starts_from_counts(counts: jnp.ndarray) -> jnp.ndarray:
     return jnp.concatenate([z, jnp.cumsum(counts, dtype=jnp.int32)])
 
 
+def value_block_shape(values) -> Tuple[int, ...]:
+    """Per-element value shape of a stream's value array: ``()`` for a
+    scalar lane (rank 1), ``(F,)`` for a dense row block (rank 2).
+
+    The ONE place the supported-value-rank policy lives. Every consumer
+    that branches on "flat vs row" or builds a stream ``pad_width`` goes
+    through here, so an unsupported rank fails loudly at the entry point
+    instead of silently falling through a hardcoded ``ndim in {1, 2}``
+    check somewhere downstream (rank-3+ tensor values would need their
+    own C-Buffer layout — DESIGN.md §14).
+    """
+    ndim = getattr(values, "ndim", None)
+    if ndim is None:
+        raise TypeError(
+            f"stream values must be an array, got {type(values).__name__} "
+            "(pytree values are handled leafwise by the binning paths)"
+        )
+    if ndim == 1:
+        return ()
+    if ndim == 2:
+        return (int(values.shape[1]),)
+    raise ValueError(
+        "stream values must be rank-1 (scalar lane) or rank-2 (row "
+        f"block, one dense feature row per tuple); got rank {ndim} with "
+        f"shape {tuple(values.shape)}"
+    )
+
+
 # ---------------------------------------------------------------------------
 # Reference binning: XLA stable sort by bin id.
 # ---------------------------------------------------------------------------
@@ -101,11 +129,15 @@ def binning_sort(
 
 
 def _pad_stream(x: jnp.ndarray, block: int, fill) -> jnp.ndarray:
+    # value_block_shape enforces the supported ranks (scalar lane / row
+    # block) — padding a rank the reduce paths would then mishandle must
+    # fail HERE, not produce a silently wrong fallback downstream
+    vshape = value_block_shape(x)
     m = x.shape[0]
     pad = (-m) % block
     if pad == 0:
         return x
-    pad_width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    pad_width = [(0, pad)] + [(0, 0)] * len(vshape)
     return jnp.pad(x, pad_width, constant_values=fill)
 
 

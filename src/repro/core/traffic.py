@@ -596,6 +596,140 @@ def serving_query_bytes(
     ) / max(1, batch)
 
 
+# --- Row-block SpMM counters (DESIGN.md §14) -------------------------------
+#
+# A row-block stream carries a dense F-column feature row per tuple, so
+# the value term scales with F while the index term does not. The fused
+# feature-tiled C-Buffer re-streams the INDEX lane once per F-tile sweep
+# (F/F_tile sweeps, F_tile columns of the rows resident per sweep) but
+# reads each value row exactly once in total; classic two-phase PB pays
+# the full (index + row) tuple three sweeps. That asymmetry is the F*
+# crossover fig9_spmm.py measures: the bigger F, the larger the share of
+# traffic the fused path moves exactly once.
+
+
+def spmm_ftile_sweeps(feature_dim: int, f_tile: int | None = None) -> int:
+    """Number of F-tile sweeps the fused row-block kernel runs — how many
+    times the binned index lane is re-streamed (DESIGN.md §14.2)."""
+    feature_dim = max(1, feature_dim)
+    ft = feature_dim if not f_tile else max(1, min(f_tile, feature_dim))
+    return -(-feature_dim // ft)
+
+
+def spmm_bytes(
+    num_tuples: int,
+    num_indices: int,
+    feature_dim: int,
+    method: str = "fused",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+    f_tile: int | None = None,
+) -> float:
+    """Sequential HBM bytes of one (m, F) row-block reduction into an
+    (n, F) accumulator at the given method.
+
+    ``fused``       — F/F_tile index-lane sweeps + ONE pass over the row
+                      payload + one accumulator write-back.
+    ``segment_sum`` — one pass over index + rows, one output write (the
+                      XLA baseline's *sequential* traffic; its scatter's
+                      random-access cost is what the roofline term adds).
+    anything else   — classic two-phase PB: the full (index + row) tuple
+                      moves three times (bin write + re-read) plus the
+                      output write.
+
+    At F=1, ``f_tile=None`` this degrades exactly to the scalar
+    counters: ``fused`` == ``fused_stream_bytes`` and the two-phase arm
+    == ``pb_two_phase_stream_bytes`` at ``tuple_bytes=8``.
+    """
+    m = float(num_tuples)
+    F = max(1, feature_dim)
+    row_bytes = F * value_bytes
+    out_bytes = float(num_indices) * F * value_bytes
+    if method == "fused":
+        sweeps = spmm_ftile_sweeps(F, f_tile)
+        return sweeps * m * index_bytes + m * row_bytes + out_bytes
+    if method == "segment_sum":
+        return m * (index_bytes + row_bytes) + out_bytes
+    return 3.0 * m * (index_bytes + row_bytes) + out_bytes
+
+
+def spmm_access_seconds(
+    num_tuples: int,
+    num_indices: int,
+    feature_dim: int,
+    method: str,
+    hw: HardwareModel,
+    bin_range: int | None = None,
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+    f_tile: int | None = None,
+) -> float:
+    """Modeled seconds of one (m, F) row-block reduction under the full
+    access-cost model (sequential bytes + random accesses into the arm's
+    working set). This is where the fused-vs-``segment_sum`` difference
+    lives: their SEQUENTIAL bytes tie (same stream, same output — no
+    static byte counter can tell them apart, ``hlo_bytes_accessed``
+    included), but ``segment_sum`` on the raw COO-order stream scatters
+    into the full (n, F) state while the fused path's accesses land in
+    the bin-resident (bin_range, F_tile) accumulator tile — the paper's
+    locality argument, charged by the same model fig3/fig5 use."""
+    m, F = float(num_tuples), max(1, feature_dim)
+    r = bin_range or max(1, min(512, num_indices))
+    stream = spmm_bytes(
+        num_tuples, num_indices, F, method, index_bytes, value_bytes, f_tile
+    )
+    if method == "fused":
+        ft = F if not f_tile else max(1, min(f_tile, F))
+        return PhaseCost(
+            stream_bytes=stream,
+            random_accesses=m * spmm_ftile_sweeps(F, f_tile),
+            working_set=float(r) * ft * value_bytes,
+            core_ns_per_access=_COBRA_CORE_NS,
+        ).seconds(hw)
+    if method == "segment_sum":
+        return PhaseCost(
+            stream_bytes=stream,
+            random_accesses=m,
+            working_set=float(num_indices) * F * value_bytes,
+            core_ns_per_access=_BASELINE_CORE_NS,
+        ).seconds(hw)
+    nb = num_bins_for_range(num_indices, r)
+    tb = index_bytes + F * value_bytes
+    return (
+        binning_cost(num_tuples, nb, hw, tuple_bytes=tb).seconds(hw)
+        + binread_cost(
+            num_tuples, r, hw, tuple_bytes=tb,
+            value_bytes_per_index=F * value_bytes,
+        ).seconds(hw)
+    )
+
+
+def spmm_crossover_f(
+    num_tuples: int,
+    num_indices: int,
+    f_grid,
+    baseline: str = "two_phase",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+    f_tile: int | None = None,
+) -> int | None:
+    """Smallest F in ``f_grid`` where the fused row-block model moves
+    strictly fewer bytes than ``baseline`` — the modeled F* fig9 reports
+    next to the measured one. Returns None when fused never wins on the
+    grid."""
+    for F in sorted(int(f) for f in f_grid):
+        fused = spmm_bytes(
+            num_tuples, num_indices, F, "fused", index_bytes, value_bytes,
+            f_tile,
+        )
+        base = spmm_bytes(
+            num_tuples, num_indices, F, baseline, index_bytes, value_bytes,
+        )
+        if fused < base:
+            return F
+    return None
+
+
 def pb_seconds(
     num_tuples: int, num_indices: int, bin_range: int, hw: HardwareModel
 ) -> float:

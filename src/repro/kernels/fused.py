@@ -31,6 +31,11 @@ checks both (``core/executor.py::PBExecutor.decide``, DESIGN.md §8).
 Validated with ``interpret=True`` against the dense scatter oracle
 (``kernels/ref.py::scatter_reduce_ref``); on a TPU backend the same call
 compiles the Mosaic kernel.
+
+``cobra_bin_accumulate_rows_pallas`` is the row-block (SpMM)
+generalization: values carry a dense feature row of width F and the
+accumulator becomes a feature-tiled (V_tile × F_tile) C-Buffer — the
+kernel behind GNN neighbor aggregation (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -136,6 +141,204 @@ def _fused_kernel(
             return 0
 
         jax.lax.fori_loop(0, num_bins, drain, 0)
+
+
+def _fused_rows_kernel(
+    keys_ref,
+    idx_ref,
+    val_ref,
+    acc_ref,
+    len_ref,
+    cb_idx_ref,
+    cb_val_ref,
+    *,
+    num_bins: int,
+    bin_range: int,
+    cap: int,
+    nblocks: int,
+    op: str,
+):
+    """Row-block fused bin-and-accumulate: the SpMM generalization.
+
+    The accumulator block is a ``(num_bins, bin_range, f_tile)`` C-Buffer
+    tile over BOTH output vertices and feature columns; the grid is
+    ``(n_ftiles, nblocks + 1)`` with the feature axis outermost (Pallas
+    iterates the LAST grid dimension fastest), so one F-tile's
+    accumulator stays VMEM-resident across the whole stream sweep and the
+    binned index stream is re-streamed exactly ``F / f_tile`` times.
+
+    Flushes stay dense: the ``add`` eviction is a
+    ``(bin_range, cap) @ (cap, f_tile)`` one-hot matmul (MXU work);
+    ``min``/``max`` evict through a masked ``(cap, bin_range, f_tile)``
+    broadcast reduce (VPU work) — the executor's legality check budgets
+    that temporary alongside the accumulator (DESIGN.md §14).
+    """
+    step = pl.program_id(1)
+    ident = reduce_identity(op, acc_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        # re-entered once per F-tile: the freshly mapped accumulator
+        # block holds garbage and the C-Buffers must restart empty
+        len_ref[...] = jnp.zeros_like(len_ref)
+        acc_ref[...] = jnp.full_like(acc_ref, ident)
+
+    lane = jnp.arange(cap, dtype=jnp.int32)
+
+    def flush_bin(b):
+        l = len_ref[b]
+        offs = cb_idx_ref[b, :] - b * bin_range
+        iota = jax.lax.broadcasted_iota(jnp.int32, (cap, bin_range), 1)
+        hit = jnp.logical_and(offs[:, None] == iota, (lane < l)[:, None])
+        vals = cb_val_ref[b, :, :]  # (cap, f_tile)
+        if op == "add":
+            # one-hot matmul eviction: (bin_range, cap) @ (cap, f_tile).
+            # Unfilled lanes hold uninitialized scratch — select them to
+            # zero BEFORE the dot (0 * garbage is NaN-unsafe for floats)
+            vals = jnp.where((lane < l)[:, None], vals, 0)
+            contrib = jax.lax.dot(
+                hit.astype(vals.dtype).T,
+                vals,
+                preferred_element_type=acc_ref.dtype,
+            )
+            acc_ref[b, :, :] = acc_ref[b, :, :] + contrib.astype(acc_ref.dtype)
+        else:
+            masked = jnp.where(hit[:, :, None], vals[:, None, :], ident)
+            if op == "min":
+                contrib = jnp.min(masked, axis=0)
+                acc_ref[b, :, :] = jnp.minimum(
+                    acc_ref[b, :, :], contrib.astype(acc_ref.dtype)
+                )
+            else:  # max
+                contrib = jnp.max(masked, axis=0)
+                acc_ref[b, :, :] = jnp.maximum(
+                    acc_ref[b, :, :], contrib.astype(acc_ref.dtype)
+                )
+        len_ref[b] = 0
+
+    @pl.when(step < nblocks)
+    def _process():
+        keys = keys_ref[...]
+        idx = idx_ref[...]
+        val = val_ref[...]
+        block = keys.shape[0]
+        iota = jax.lax.broadcasted_iota(jnp.int32, (block, num_bins), 1)
+        onehot = (keys[:, None] == iota).astype(jnp.int32)
+        incoming = jnp.sum(onehot, axis=0)
+        ranks = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=1) - 1
+
+        need = jnp.logical_and(len_ref[...] + incoming > cap, len_ref[...] > 0)
+
+        def maybe_flush(b, _):
+            jax.lax.cond(need[b], lambda: flush_bin(b), lambda: None)
+            return 0
+
+        jax.lax.fori_loop(0, num_bins, maybe_flush, 0)
+
+        lens_now = len_ref[...]
+
+        def append(i, _):
+            k = keys[i]
+
+            def do():
+                slot = lens_now[k] + ranks[i]
+                cb_idx_ref[k, slot] = idx[i]
+                cb_val_ref[k, slot, :] = val[i, :]
+
+            jax.lax.cond(k < num_bins, do, lambda: None)
+            return 0
+
+        jax.lax.fori_loop(0, block, append, 0)
+        len_ref[...] = lens_now + incoming
+
+    @pl.when(step == nblocks)
+    def _drain():
+        def drain(b, _):
+            flush_bin(b)
+            return 0
+
+        jax.lax.fori_loop(0, num_bins, drain, 0)
+
+
+def cobra_bin_accumulate_rows_pallas(
+    idx: jnp.ndarray,
+    val: jnp.ndarray,
+    *,
+    num_indices: int,
+    bin_range: int,
+    num_bins: int,
+    op: str = "add",
+    block: int = 512,
+    cap: int = 512,
+    f_tile: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused row-block (SpMM) bin-and-accumulate in F/f_tile stream sweeps.
+
+    ``val`` is ``(m, F)``; returns the dense ``(num_indices, F)``
+    reduction with ``reduce_identity(op, val.dtype)`` at untouched rows.
+    The feature axis is tiled at ``f_tile`` columns (default: all of F);
+    each tile re-streams the binned ``(idx, bin-id)`` stream once, with a
+    ``(num_bins, bin_range, f_tile)`` accumulator resident in VMEM for
+    the whole sweep — the (V_tile × F_tile) C-Buffer of DESIGN.md §14.
+    """
+    if op not in _FUSED_OPS:
+        raise ValueError(f"fused accumulate needs a commutative op, got {op!r}")
+    if val.ndim != 2:
+        raise ValueError(f"row-block accumulate wants (m, F) values, got {val.shape}")
+    assert cap >= block, "C-Buffer capacity must cover one block"
+    assert num_bins * bin_range >= num_indices, "accumulator must cover the domain"
+    m, F = val.shape
+    ident = reduce_identity(op, val.dtype)
+    if m == 0 or F == 0:
+        return jnp.full((num_indices, F), ident, val.dtype)
+    ft = F if f_tile is None else int(f_tile)
+    assert 1 <= ft <= F, f"f_tile {ft} out of range for F={F}"
+    keys = (idx // bin_range).astype(jnp.int32)
+    pad = (-m) % block
+    fpad = (-F) % ft
+    keys_p = jnp.pad(keys, (0, pad), constant_values=num_bins)
+    idx_p = jnp.pad(idx, (0, pad))
+    val_p = jnp.pad(val, ((0, pad), (0, fpad)))
+    nblocks = keys_p.shape[0] // block
+    n_ftiles = val_p.shape[1] // ft
+    # feature axis OUTERMOST: Pallas iterates the last grid dim fastest,
+    # so (n_ftiles, nblocks+1) sweeps the whole stream per F-tile
+    grid = (n_ftiles, nblocks + 1)
+
+    def stream_map(f, i):
+        return (jnp.minimum(i, nblocks - 1),)
+
+    acc = pl.pallas_call(
+        functools.partial(
+            _fused_rows_kernel,
+            num_bins=num_bins,
+            bin_range=bin_range,
+            cap=cap,
+            nblocks=nblocks,
+            op=op,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), stream_map),
+            pl.BlockSpec((block,), stream_map),
+            pl.BlockSpec((block, ft), lambda f, i: (jnp.minimum(i, nblocks - 1), f)),
+        ],
+        # constant over the inner (stream) axis: one F-tile's accumulator
+        # stays VMEM-resident for the whole sweep, written back to HBM
+        # once when the outer index advances
+        out_specs=pl.BlockSpec((num_bins, bin_range, ft), lambda f, i: (0, 0, f)),
+        out_shape=jax.ShapeDtypeStruct(
+            (num_bins, bin_range, val_p.shape[1]), val.dtype
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((num_bins,), jnp.int32),  # fill levels
+            pltpu.VMEM((num_bins, cap), jnp.int32),  # C-Buffer idx
+            pltpu.VMEM((num_bins, cap, ft), val.dtype),  # C-Buffer row values
+        ],
+        interpret=interpret,
+    )(keys_p, idx_p, val_p)
+    return acc.reshape(num_bins * bin_range, val_p.shape[1])[:num_indices, :F]
 
 
 def cobra_bin_accumulate_pallas(

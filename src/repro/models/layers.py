@@ -390,6 +390,142 @@ def logits_apply(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# GNN neighbor aggregation — PB as SpMM (row-block streams, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# out[v] = reduce_{u in N_in(v)} h[u]  is exactly a PB reduction whose
+# values are feature rows: gather each in-edge's source row from the CSC
+# (edges sorted by destination -> elementwise-sorted in-bounds indices)
+# and bin-and-accumulate by destination. The backward pass of the sum is
+# the SAME stream over the transpose layout (the PR 4 dual-build CSR):
+# dL/dh[u] = sum_{(u,v)} g[v], a PB reduction keyed by source. Both
+# directions therefore ride the feature-tiled fused C-Buffer kernel; the
+# custom VJPs below follow the ``_pb_take`` idiom (zero-byte token
+# carrying static shape/dtype through the residuals).
+
+
+def _spmm_stream(x, seg, neighs, n, op):
+    """One PB row-block sweep: gather x rows at ``neighs``, reduce by the
+    sorted segment ids ``seg`` into (n, F)."""
+    rows = jnp.take(x, neighs, axis=0)
+    return execute_reduce(
+        seg, rows, out_size=n, op=op, method="fused",
+        sorted_within=1, in_bounds=True,
+    )
+
+
+@jax.custom_vjp
+def _pb_neighbor_sum(h, csc_seg, csc_neighs, csr_seg, csr_neighs):
+    return _spmm_stream(h, csc_seg, csc_neighs, h.shape[0], "add")
+
+
+def _pb_neighbor_sum_fwd(h, csc_seg, csc_neighs, csr_seg, csr_neighs):
+    token = jnp.zeros((h.shape[0], 0), h.dtype)
+    out = _spmm_stream(h, csc_seg, csc_neighs, h.shape[0], "add")
+    return out, (csr_seg, csr_neighs, token)
+
+
+def _pb_neighbor_sum_bwd(res, g):
+    csr_seg, csr_neighs, token = res
+    n, dt = token.shape[0], token.dtype
+    # transpose stream: per CSR edge (u -> v), dh[u] += g[v]; csr_seg is
+    # sorted by source, so this is another fused PB sweep
+    dh = _spmm_stream(g.astype(jnp.float32), csr_seg, csr_neighs, n, "add")
+    return dh.astype(dt), None, None, None, None
+
+
+_pb_neighbor_sum.defvjp(_pb_neighbor_sum_fwd, _pb_neighbor_sum_bwd)
+
+
+@jax.custom_vjp
+def _pb_neighbor_max(h, csc_seg, csc_neighs, csr_seg, csr_neighs):
+    return _spmm_stream(h, csc_seg, csc_neighs, h.shape[0], "max")
+
+
+def _pb_neighbor_max_fwd(h, csc_seg, csc_neighs, csr_seg, csr_neighs):
+    out = _spmm_stream(h, csc_seg, csc_neighs, h.shape[0], "max")
+    return out, (h, out, csr_seg, csr_neighs)
+
+
+def _pb_neighbor_max_bwd(res, g):
+    h, out, csr_seg, csr_neighs = res
+    # subgradient: every attaining in-neighbor receives the full g[v]
+    # (ties propagate to all arg-maxes — a valid subgradient choice,
+    # documented in DESIGN.md §14). The masked contributions reduce by
+    # source over the transpose stream, same fused sweep as the sum bwd.
+    hu = jnp.take(h, csr_seg, axis=0)  # row of u per transpose edge
+    ov = jnp.take(out, csr_neighs, axis=0)  # max at v per transpose edge
+    gv = jnp.take(g, csr_neighs, axis=0)
+    contrib = jnp.where(hu == ov, gv.astype(jnp.float32), 0.0)
+    dh = execute_reduce(
+        csr_seg, contrib, out_size=h.shape[0], op="add", method="fused",
+        sorted_within=1, in_bounds=True,
+    )
+    return dh.astype(h.dtype), None, None, None, None
+
+
+_pb_neighbor_max.defvjp(_pb_neighbor_max_fwd, _pb_neighbor_max_bwd)
+
+
+def gnn_aggregate(h, csc, csr, *, op: str = "sum") -> jnp.ndarray:
+    """Neighbor aggregation over in-edges: (n, F) features -> (n, F).
+
+    ``csc``/``csr`` are the dual layouts of ONE graph (PR 4
+    ``build_csr_csc``): the CSC drives the forward pull (edges sorted by
+    destination), the CSR is the transpose stream the backward rides.
+    ``op``: ``sum`` | ``mean`` (sum / max(in_degree, 1)) | ``max``
+    (identity-masked to 0 for isolated vertices).
+    """
+    from repro.core.graph import segment_ids_from_offsets
+
+    if op not in ("sum", "mean", "max"):
+        raise ValueError(f"gnn_aggregate op must be sum|mean|max, got {op!r}")
+    n = csc.num_nodes
+    E = csc.num_edges
+    if h.ndim != 2 or h.shape[0] != n:
+        raise ValueError(
+            f"features must be (num_nodes, F) = ({n}, F); got {h.shape}"
+        )
+    if E == 0:
+        return jnp.zeros_like(h)
+    csc_seg = segment_ids_from_offsets(csc.offsets, E)
+    csr_seg = segment_ids_from_offsets(csr.offsets, E)
+    if op == "max":
+        out = _pb_neighbor_max(h, csc_seg, csc.neighs, csr_seg, csr.neighs)
+        indeg = jnp.diff(csc.offsets)
+        return jnp.where((indeg > 0)[:, None], out, 0)
+    out = _pb_neighbor_sum(h, csc_seg, csc.neighs, csr_seg, csr.neighs)
+    if op == "mean":
+        indeg = jnp.maximum(jnp.diff(csc.offsets), 1).astype(out.dtype)
+        out = out / indeg[:, None]
+    return out
+
+
+def init_gnn_layer(key, d_in: int, d_out: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_msg": pp.winit(ks[0], (d_in, d_out), ("embed", "mlp"), dtype),
+        "w_self": pp.winit(ks[1], (d_in, d_out), ("embed", "mlp"), dtype),
+        "b": pp.zeros((d_out,), ("mlp",), dtype),
+    }
+
+
+def gnn_layer_apply(
+    p: Params, h: jnp.ndarray, csc, csr, *, agg: str = "mean", act=jax.nn.relu
+) -> jnp.ndarray:
+    """One message-passing layer: h' = act(agg(h W_msg) + h W_self + b).
+
+    Messages are transformed BEFORE aggregation, so the aggregate is the
+    row-block SpMM at F = d_out — the fused feature-tiled C-Buffer path
+    end to end, forward and backward (DESIGN.md §14).
+    """
+    msg = h @ p["w_msg"].astype(h.dtype)
+    agg_out = gnn_aggregate(msg, csc, csr, op=agg)
+    y = agg_out + h @ p["w_self"].astype(h.dtype) + p["b"].astype(h.dtype)
+    return act(y) if act is not None else y
+
+
+# ---------------------------------------------------------------------------
 # MoE layer — PB dispatch (counting-sort by expert id)
 # ---------------------------------------------------------------------------
 
@@ -455,10 +591,12 @@ def _moe_expert_shard(x2d, wr, w1, w3, w2, cfg: ModelConfig, e_start, E_local):
     rows = jnp.where((slot_of_assign >= 0)[:, None], rows, 0)
     w = gate_w.reshape(-1).astype(dt)
     # combine = commutative add of k rows per token: the fused
-    # single-sweep reduction (DESIGN.md §8). The assignment stream is in
-    # token order (arange.repeat), i.e. elementwise-sorted indices —
-    # sorted_within=1 hands XLA that fact; block=T*k makes the sweep a
-    # single unpadded segment-reduce (no scan carry in the hot path).
+    # single-sweep reduction over a ROW-BLOCK stream (DESIGN.md §8, §14)
+    # — on TPU this is the feature-tiled C-Buffer kernel, not the
+    # two-phase fallback. The assignment stream is in token order
+    # (arange.repeat), i.e. elementwise-sorted in-bounds indices —
+    # sorted_within=1 / in_bounds=True hand XLA those facts; block=T*k
+    # makes the jnp sweep a single unpadded segment-reduce.
     out = execute_reduce(
         jnp.arange(T, dtype=jnp.int32).repeat(k),
         rows * w[:, None],
@@ -467,6 +605,7 @@ def _moe_expert_shard(x2d, wr, w1, w3, w2, cfg: ModelConfig, e_start, E_local):
         method="fused",
         sorted_within=1,
         block=T * k,
+        in_bounds=True,
     )
     return out
 
@@ -563,8 +702,9 @@ def _moe_weight_stationary(p, x, cfg: ModelConfig, mesh):
         rows = jnp.take(yb, safe, axis=0)
         rows = jnp.where((slot_of >= 0)[:, None], rows, 0)
         w_g = gate_w.reshape(-1).astype(dt)
-        # fused single-sweep combine (DESIGN.md §8), token-sorted stream,
-        # block=T*k: one unpadded segment-reduce, no scan carry
+        # fused single-sweep row-block combine (DESIGN.md §8, §14),
+        # token-sorted in-bounds stream, block=T*k: one unpadded
+        # segment-reduce, no scan carry
         out = execute_reduce(
             jnp.arange(T, dtype=jnp.int32).repeat(k),
             rows * w_g[:, None],
@@ -573,6 +713,7 @@ def _moe_weight_stationary(p, x, cfg: ModelConfig, mesh):
             method="fused",
             sorted_within=1,
             block=T * k,
+            in_bounds=True,
         )
         out = jax.lax.psum(out, "model")  # sum expert-shard contributions
         return out.reshape(B, S, -1)

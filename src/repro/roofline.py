@@ -236,6 +236,84 @@ class PBStreamRoofline:
 
 
 @dataclass(frozen=True)
+class SpMMRoofline:
+    """HBM-roofline view of one (m, F) row-block reduction — PB as SpMM
+    (DESIGN.md §14). Three arms share the byte model of
+    ``traffic.spmm_bytes``: the feature-tiled fused C-Buffer (index lane
+    re-streamed F/F_tile times, row payload moved once), classic
+    two-phase PB (full tuple moved three times), and XLA ``segment_sum``
+    (one pass; its scatter's random-access cost is outside the
+    sequential-byte model, which is why measured wall-clock can favor
+    fused before the byte model does). The F* crossover — the smallest F
+    where fused moves fewer bytes than a baseline — is what
+    ``benchmarks/fig9_spmm.py`` reports modeled next to measured."""
+
+    num_tuples: int
+    num_indices: int
+    feature_dim: int
+    f_tile: Optional[int] = None
+    index_bytes: int = 4
+    value_bytes: int = 4
+    hbm_bw: float = 819e9
+
+    def _bytes(self, method: str) -> float:
+        from repro.core.traffic import spmm_bytes
+
+        return spmm_bytes(
+            self.num_tuples, self.num_indices, self.feature_dim, method,
+            self.index_bytes, self.value_bytes, self.f_tile,
+        )
+
+    @property
+    def ftile_sweeps(self) -> int:
+        from repro.core.traffic import spmm_ftile_sweeps
+
+        return spmm_ftile_sweeps(self.feature_dim, self.f_tile)
+
+    @property
+    def fused_bytes(self) -> float:
+        return self._bytes("fused")
+
+    @property
+    def two_phase_bytes(self) -> float:
+        return self._bytes("two_phase")
+
+    @property
+    def segment_sum_bytes(self) -> float:
+        return self._bytes("segment_sum")
+
+    @property
+    def t_fused(self) -> float:
+        return self.fused_bytes / self.hbm_bw
+
+    @property
+    def t_two_phase(self) -> float:
+        return self.two_phase_bytes / self.hbm_bw
+
+    @property
+    def t_segment_sum(self) -> float:
+        return self.segment_sum_bytes / self.hbm_bw
+
+    @property
+    def speedup_ceiling_vs_two_phase(self) -> float:
+        return self.two_phase_bytes / self.fused_bytes
+
+    @property
+    def speedup_ceiling_vs_segment_sum(self) -> float:
+        return self.segment_sum_bytes / self.fused_bytes
+
+    def crossover_f(self, f_grid, baseline: str = "two_phase"):
+        """Modeled F*: smallest F in ``f_grid`` where fused wins on
+        bytes vs ``baseline`` (None if it never does)."""
+        from repro.core.traffic import spmm_crossover_f
+
+        return spmm_crossover_f(
+            self.num_tuples, self.num_indices, f_grid, baseline,
+            self.index_bytes, self.value_bytes, self.f_tile,
+        )
+
+
+@dataclass(frozen=True)
 class ShardedPBStreamRoofline:
     """Roofline view of one mesh-sharded irregular update stream
     (DESIGN.md §9): per-device HBM bytes of the owner-sharded fused

@@ -308,6 +308,65 @@ def test_bin_streams_clamp_is_logged():
     assert all(e["method"] in ("sort", "counting") for e in clamped)
 
 
+def test_decide_feature_dim_stamps_f_tile_and_key():
+    """A row-block (SpMM) reduce decision carries its F-tile: decide
+    gets a distinct cache key per feature_dim, stamps ``f_tile`` on the
+    decision, and describe() surfaces it (DESIGN.md §14)."""
+    from repro.core import pb as pb_core
+
+    ex = PBExecutor()
+    n, m = 1 << 10, 1 << 13
+    d0 = ex.decide(n, m, kind="reduce")
+    d_f = ex.decide(n, m, kind="reduce", feature_dim=16)
+    assert d0.f_tile == 0
+    assert d_f.f_tile >= 1
+    assert ex._key(n, m, jnp.float32, kind="reduce") != ex._key(
+        n, m, jnp.float32, kind="reduce", feature_dim=16
+    )
+    if d_f.f_tile:
+        assert f"/f{d_f.f_tile}" in d_f.describe()
+    # the F-tile never exceeds F and degrades to full-F on tiny domains
+    assert ex.choose_f_tile(3, 64) <= 3
+    assert ex.choose_f_tile(0, 64) == 0
+    # value_block_shape: the one rank policy behind padding/legality
+    assert pb_core.value_block_shape(jnp.zeros((5,))) == ()
+    assert pb_core.value_block_shape(jnp.zeros((5, 7))) == (7,)
+    with pytest.raises(ValueError, match="rank"):
+        pb_core.value_block_shape(jnp.zeros((5, 7, 2)))
+    with pytest.raises(TypeError):
+        pb_core.value_block_shape([1, 2, 3])
+
+
+def test_batched_rows_clamp_logs_feature_dim_and_f_tile(monkeypatch):
+    """Row-valued batched streams that clamp off an un-vmappable auto
+    decision must log the requested F and the chosen F-tile on the
+    ``+batch-clamp`` entry."""
+    ex = PBExecutor()
+    rng = np.random.default_rng(41)
+    B, m, n, F = 2, 512, 256, 6
+    idx = jnp.asarray(rng.integers(0, n, (B, m)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(B, m, F)), jnp.float32)
+    forced = ex._finalize("hierarchical", n, 64, "analytic")
+    monkeypatch.setattr(ex, "decide", lambda *a, **k: forced)
+    before = len(ex.decision_log)
+    out = ex.reduce_streams(idx, val, out_size=n, op="add")
+    assert out.shape == (B, n, F)
+    clamped = [
+        e for e in ex.decision_log[before:]
+        if e["source"].endswith("+batch-clamp")
+    ]
+    assert clamped, "illegal batched method must clamp and log"
+    assert all(e["feature_dim"] == F for e in clamped)
+    assert all(e["f_tile"] >= 1 for e in clamped)
+    # per-lane parity with the oracle survives the clamp
+    for q in range(B):
+        np.testing.assert_allclose(
+            np.asarray(out[q]),
+            np.asarray(ref.scatter_reduce_ref(idx[q], val[q], n)),
+            atol=1e-5,
+        )
+
+
 def test_rewired_consumers_share_executor():
     """build_csr_pb(method='auto') routes through the default executor
     and still matches the baseline CSR exactly."""

@@ -16,7 +16,11 @@ from repro.core import (
 )
 from repro.core import pb as pb_core
 from repro.kernels import ref
-from repro.kernels.fused import cobra_bin_accumulate_pallas, reduce_identity
+from repro.kernels.fused import (
+    cobra_bin_accumulate_pallas,
+    cobra_bin_accumulate_rows_pallas,
+    reduce_identity,
+)
 
 
 def _random_stream(n, m, seed=0, dtype=jnp.float32):
@@ -66,6 +70,51 @@ def test_fused_kernel_single_bin_and_empty():
         num_indices=10, bin_range=5, num_bins=2,
     )
     assert empty.shape == (10,) and float(jnp.abs(empty).sum()) == 0.0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("op", ["add", "max"])
+@pytest.mark.parametrize("f_tile", [None, 3])
+def test_fused_rows_kernel_matches_scatter_ref(dtype, op, f_tile):
+    """The row-block (SpMM) kernel == dense row scatter-reduce, with the
+    feature axis tiled (f_tile=3 over F=7 exercises the ragged final
+    tile and its padding columns)."""
+    n, F = 301, 7
+    rng = np.random.default_rng(31)
+    idx = jnp.asarray(rng.integers(0, n, 1500), jnp.int32)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        val = jnp.asarray(rng.integers(-50, 50, (1500, F)), dtype)
+    else:
+        val = jnp.asarray(rng.normal(size=(1500, F)), dtype)
+    got = cobra_bin_accumulate_rows_pallas(
+        idx, val, num_indices=n, bin_range=50, num_bins=7, op=op,
+        block=256, cap=512, f_tile=f_tile, interpret=True,
+    )
+    _assert_reduce(got, idx, val, n, op=op)
+
+
+def test_fused_rows_kernel_edges():
+    """Empty stream, single bin, F == f_tile == 1 (degenerate scalar),
+    and the (m, 0) feature-less block all hold shape/identity."""
+    n = 40
+    rng = np.random.default_rng(33)
+    idx = jnp.asarray(rng.integers(0, n, 300), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(300, 1)), jnp.float32)
+    got = cobra_bin_accumulate_rows_pallas(
+        idx, val, num_indices=n, bin_range=n, num_bins=1, block=128,
+        cap=512, interpret=True,
+    )
+    _assert_reduce(got, idx, val, n)
+    empty = cobra_bin_accumulate_rows_pallas(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0, 4), jnp.float32),
+        num_indices=10, bin_range=5, num_bins=2,
+    )
+    assert empty.shape == (10, 4) and float(jnp.abs(empty).sum()) == 0.0
+    fless = cobra_bin_accumulate_rows_pallas(
+        idx, jnp.zeros((300, 0), jnp.float32), num_indices=n, bin_range=5,
+        num_bins=8,
+    )
+    assert fless.shape == (n, 0)
 
 
 def test_fused_kernel_rejects_non_commutative_op():
@@ -219,6 +268,46 @@ def test_bin_read_pytree_values():
     np.testing.assert_array_equal(
         np.asarray(got_min), np.asarray(ref.scatter_reduce_ref(idx, val_i, 100, op="min"))
     )
+
+
+@pytest.mark.parametrize("op", ["add", "max"])
+@pytest.mark.parametrize("F", [1, 3, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_row_reduce_bitexact_across_renderings(op, F, dtype):
+    """Row-valued (m, F) parity, the deterministic twin of the
+    tests/test_property.py hypothesis property (which skips where
+    hypothesis is absent): fused row-block == sort == counting ==
+    segment_sum (op=add) == dense oracle BIT-EXACTLY — stable binning
+    preserves per-output-row accumulation order, so float32 sums are
+    identical across renderings; max is exact by idempotence."""
+    from repro import compat
+
+    ex = PBExecutor()
+    n = 64
+    rng = np.random.default_rng(43)
+    for m in (1, 37, 300):
+        idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+            val = jnp.asarray(rng.integers(-50, 50, (m, F)), dtype)
+        else:
+            val = jnp.asarray(rng.standard_normal((m, F)), dtype)
+        arms = {
+            "fused": ex.reduce_stream(
+                idx, val, out_size=n, op=op, method="fused"
+            ),
+            "sort": ex.reduce_stream(idx, val, out_size=n, op=op, method="sort"),
+            "counting": ex.reduce_stream(
+                idx, val, out_size=n, op=op, method="counting"
+            ),
+        }
+        if op == "add":
+            arms["segment_sum"] = compat.segment_sum(val, idx, num_segments=n)
+        want = ref.scatter_reduce_ref(idx, val, n, op=op)
+        for arm, got in arms.items():
+            assert got.dtype == val.dtype, arm
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want), err_msg=f"{arm} m={m}"
+            )
 
 
 def test_max_reduce_identity_and_methods():

@@ -1,0 +1,149 @@
+"""GNN neighbor aggregation as PB row-block SpMM (DESIGN.md §14).
+
+Forward: gnn_aggregate == a dense-adjacency numpy oracle (with edge
+multiplicity) for sum / mean / max. Backward: the custom VJPs — another
+PB stream over the transpose (PR 4 dual-build CSR) — match the
+hand-computed gradients, including the documented max-tie subgradient
+(every attaining in-neighbor receives the full cotangent).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.models.layers as L
+from repro.core import COO
+from repro.core.neighbor_populate import build_csr_csc
+from repro.models.params import unbox
+
+
+def _graph(n=30, m=150, seed=5):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    # force duplicates so multigraph multiplicity is exercised
+    src[: m // 10] = src[0]
+    dst[: m // 10] = dst[0]
+    coo = COO(jnp.asarray(src), jnp.asarray(dst), n)
+    csr, csc = build_csr_csc(coo)
+    return coo, csr, csc
+
+
+def _dense_agg(src, dst, h, n, op):
+    """Per-vertex in-edge aggregation by explicit edge loop (keeps
+    multiplicity: one contribution per edge, not per distinct source)."""
+    F = h.shape[1]
+    out = np.zeros((n, F), h.dtype)
+    if op == "max":
+        filled = np.zeros(n, bool)
+        for u, v in zip(src, dst):
+            out[v] = np.maximum(out[v], h[u]) if filled[v] else h[u]
+            filled[v] = True
+        return out
+    for u, v in zip(src, dst):
+        out[v] += h[u]
+    if op == "mean":
+        indeg = np.bincount(dst, minlength=n)
+        out /= np.maximum(indeg, 1)[:, None]
+    return out
+
+
+@pytest.mark.parametrize("op", ["sum", "mean", "max"])
+@pytest.mark.parametrize("F", [1, 5])
+def test_gnn_aggregate_matches_dense_oracle(op, F):
+    coo, csr, csc = _graph()
+    n = coo.num_nodes
+    rng = np.random.default_rng(7)
+    h = rng.standard_normal((n, F)).astype(np.float32)
+    got = np.asarray(L.gnn_aggregate(jnp.asarray(h), csc, csr, op=op))
+    want = _dense_agg(np.asarray(coo.src), np.asarray(coo.dst), h, n, op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["sum", "mean"])
+def test_gnn_aggregate_linear_ops_grad(op):
+    """d/dh of sum(agg(h) * w): dh[u] += w[v] (/indeg for mean) per edge
+    (u -> v) — the transpose-stream VJP against the hand-built answer."""
+    coo, csr, csc = _graph(seed=9)
+    n, F = coo.num_nodes, 4
+    rng = np.random.default_rng(11)
+    h = jnp.asarray(rng.standard_normal((n, F)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((n, F)), jnp.float32)
+
+    dh = jax.grad(
+        lambda x: jnp.sum(L.gnn_aggregate(x, csc, csr, op=op) * w)
+    )(h)
+
+    src, dst = np.asarray(coo.src), np.asarray(coo.dst)
+    g = np.asarray(w, np.float64)
+    if op == "mean":
+        indeg = np.maximum(np.bincount(dst, minlength=n), 1)
+        g = g / indeg[:, None]
+    want = np.zeros((n, F))
+    for u, v in zip(src, dst):
+        want[u] += g[v]
+    np.testing.assert_allclose(np.asarray(dh), want, rtol=1e-4, atol=1e-4)
+
+
+def test_gnn_aggregate_max_grad_ties_get_full_cotangent():
+    """The max VJP routes the FULL cotangent to every attaining neighbor
+    (the documented subgradient choice) — exercised with engineered ties
+    and per-edge multiplicity."""
+    n = 6
+    src = np.array([0, 1, 0, 2, 2], np.int32)  # v3 <- {0, 1}, v4 <- {0, 2}
+    dst = np.array([3, 3, 4, 4, 5], np.int32)
+    coo = COO(jnp.asarray(src), jnp.asarray(dst), n)
+    csr, csc = build_csr_csc(coo)
+    h = jnp.asarray(
+        [[2.0], [2.0], [1.0], [0.0], [0.0], [0.0]], jnp.float32
+    )  # h[0] == h[1]: engineered tie at v3
+    w = jnp.asarray([[0.0], [0.0], [0.0], [5.0], [7.0], [11.0]], jnp.float32)
+    dh = np.asarray(
+        jax.grad(
+            lambda x: jnp.sum(L.gnn_aggregate(x, csc, csr, op="max") * w)
+        )(h)
+    )
+    # v3: sources 0 and 1 both attain max 2.0 -> each gets the full 5;
+    # source 0 also holds v4's sole max -> + the full 7
+    assert dh[0, 0] == pytest.approx(5.0 + 7.0)
+    assert dh[1, 0] == pytest.approx(5.0)
+    # v5: source 2 gets 11; its v4 contribution (h=1 < 2) gets nothing
+    assert dh[2, 0] == pytest.approx(11.0)
+    assert dh[3:, 0].sum() == 0.0
+
+
+def test_gnn_aggregate_validation_and_empty():
+    coo, csr, csc = _graph()
+    h = jnp.zeros((coo.num_nodes, 3), jnp.float32)
+    with pytest.raises(ValueError, match="sum|mean|max"):
+        L.gnn_aggregate(h, csc, csr, op="median")
+    with pytest.raises(ValueError, match="num_nodes"):
+        L.gnn_aggregate(jnp.zeros((7, 3)), csc, csr)
+    # edgeless graph: zeros, not identities
+    e = COO(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32), 8)
+    ecsr, ecsc = build_csr_csc(e)
+    out = L.gnn_aggregate(jnp.ones((8, 3)), ecsc, ecsr, op="max")
+    assert float(jnp.abs(out).sum()) == 0.0
+    # isolated vertices under max are 0, not -inf
+    out = np.asarray(L.gnn_aggregate(h - 5.0, csc, csr, op="max"))
+    indeg = np.bincount(np.asarray(coo.dst), minlength=coo.num_nodes)
+    assert (out[indeg == 0] == 0).all()
+
+
+def test_gnn_layer_apply_end_to_end():
+    """One message-passing layer: correct shape, finite output, and
+    gradients flowing to every parameter through BOTH PB streams."""
+    coo, csr, csc = _graph(seed=13)
+    n, d_in, d_out = coo.num_nodes, 6, 5
+    p, _ = unbox(L.init_gnn_layer(jax.random.PRNGKey(0), d_in, d_out))
+    h = jax.random.normal(jax.random.PRNGKey(1), (n, d_in))
+    for agg in ("sum", "mean", "max"):
+        y = L.gnn_layer_apply(p, h, csc, csr, agg=agg)
+        assert y.shape == (n, d_out)
+        assert bool(jnp.isfinite(y).all())
+    grads = jax.grad(
+        lambda q: jnp.sum(L.gnn_layer_apply(q, h, csc, csr, agg="mean") ** 2)
+    )(p)
+    for k, g in grads.items():
+        assert bool(jnp.isfinite(g).all()), k
+        assert float(jnp.abs(g).sum()) > 0, k

@@ -7,8 +7,10 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro import compat
 from repro.core import COO, CobraPlan, get_default_executor
 from repro.core import pb as pb_core
+from repro.core.executor import execute_reduce
 from repro.core.cobra import hierarchical_binning
 from repro.core.neighbor_populate import build_csr_oracle, build_csr_pb
 from repro.core.scatter import pb_scatter_add, scatter_add_baseline
@@ -152,6 +154,48 @@ def test_reduce_streams_batched_equals_per_lane_loop(b, m, op, method, seed):
         ]
     )
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@SET
+@given(
+    idx=st.lists(st.integers(0, 63), min_size=1, max_size=160),
+    op=st.sampled_from(["add", "max"]),
+    feature_dim=st.sampled_from([1, 3, 8]),
+    dtype=st.sampled_from(["float32", "int32"]),
+    seed=st.integers(0, 100),
+)
+def test_row_reduce_parity_fused_two_phase_segment_sum(
+    idx, op, feature_dim, dtype, seed
+):
+    """Row-valued (m, F) reduce parity (DESIGN.md §14): the fused
+    row-block path, both two-phase pipelines, and XLA ``segment_sum``
+    (op=add) agree BIT-EXACTLY with the dense oracle — stable binning
+    preserves each output row's per-element accumulation order, so even
+    float32 sums are identical across renderings; op=max is exact by
+    idempotence."""
+    ex = get_default_executor()
+    idx = jnp.asarray(idx, jnp.int32)
+    m = int(idx.shape[0])
+    rng = np.random.default_rng(seed)
+    if dtype == "int32":
+        val = jnp.asarray(rng.integers(-50, 50, (m, feature_dim)), jnp.int32)
+    else:
+        val = jnp.asarray(rng.standard_normal((m, feature_dim)), jnp.float32)
+    arms = {
+        "fused": execute_reduce(idx, val, out_size=64, op=op, method="fused"),
+        "sort": ex.reduce_stream(idx, val, out_size=64, op=op, method="sort"),
+        "counting": ex.reduce_stream(
+            idx, val, out_size=64, op=op, method="counting"
+        ),
+    }
+    if op == "add":
+        arms["segment_sum"] = compat.segment_sum(val, idx, num_segments=64)
+    want = ref.scatter_reduce_ref(idx, val, 64, op=op)
+    for arm, got in arms.items():
+        assert got.dtype == val.dtype, arm
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=arm
+        )
 
 
 @SET

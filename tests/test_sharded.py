@@ -83,6 +83,44 @@ def test_shard_reduce_equivalence_8dev():
     """)
 
 
+def test_row_reduce_parity_sharded_8dev():
+    """Row-valued F-sweep parity on a forced 8-device mesh (DESIGN.md
+    §14): shard_reduce_stream == single-device fused for F ∈ {1, 3, 8} ×
+    {add, max} — exact for int and for max, float add up to the psum
+    tree's reorder."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import make_stream_mesh, shard_reduce_stream
+        from repro.core.executor import execute_reduce
+
+        assert jax.device_count() == 8
+        mesh = make_stream_mesh(8)
+        rng = np.random.default_rng(4)
+        n, m = 301, 1001
+        idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+        for F in (1, 3, 8):
+            for op, dt, exact in (
+                ("add", np.int32, True),
+                ("add", np.float32, False),
+                ("max", np.float32, True),
+            ):
+                if np.issubdtype(dt, np.integer):
+                    v = rng.integers(-9, 9, (m, F)).astype(dt)
+                else:
+                    v = rng.standard_normal((m, F)).astype(dt)
+                v = jnp.asarray(v)
+                got = np.asarray(shard_reduce_stream(
+                    idx, v, out_size=n, mesh=mesh, op=op))
+                want = np.asarray(execute_reduce(
+                    idx, v, out_size=n, op=op, method="fused"))
+                if exact:
+                    assert np.array_equal(got, want), (F, op, dt)
+                else:
+                    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        print("row parity OK")
+    """)
+
+
 def test_sharded_consumers_8dev():
     """The distributed consumer paths against their single-device
     references: pagerank (tolerance), components (exact, incl. iteration
