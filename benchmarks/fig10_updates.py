@@ -1,0 +1,211 @@
+"""Fig 10 (beyond-paper): streaming graph mutation as a PB workload.
+
+DESIGN.md §15 turns the mutable graph into the repo's fourth update
+class: an edge batch is a (vertex, ±1) delta stream that
+``apply_edge_batch`` routes through ``PBExecutor.reduce_stream`` with
+kind="update", landing inserts in the SlackCSR's per-vertex slack and
+tombstoning deletes in place. This bench measures, per smoke graph:
+
+  * update rate — edges/second sustained by the delta-merge at a mid
+    batch size (insert-heavy mix), with the kind="update" decision the
+    executor took and the modeled bytes (``traffic.update_batch_bytes``)
+    next to the wall-clock;
+  * incremental-vs-rebuild crossover — wall-clock of
+    ``apply_edge_batch`` (scales with the batch) against one full
+    rebuild through the identity preprocess pipeline (scales with the
+    graph) over a batch-size grid; the measured crossover batch is
+    reported next to ``UpdateRoofline.crossover_batch``'s modeled one;
+  * incremental kernel maintenance — warm-started
+    ``pagerank_incremental`` / ``bfs_incremental`` /
+    ``connected_components_incremental`` after an insert-only batch vs
+    their from-scratch runs (iteration counts + wall-clock);
+  * serving — one "update" tick through the epoch-aware GraphFrontend
+    (mutation + epoch bump + CSR refresh) next to the memoized and the
+    post-mutation (fresh) pagerank tick.
+
+Tiny smoke graphs sit far below the paper's cache cliffs, so the
+modeled columns carry the asymptotic story while the measured columns
+prove the machinery runs end to end.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Rows, graph_scale
+from repro.core import traffic
+from repro.core.components import (
+    connected_components_fused,
+    connected_components_incremental,
+)
+from repro.core.executor import PBExecutor
+from repro.core.graph import graph_suite
+from repro.core.neighbor_populate import build_slack_csr
+from repro.core.pagerank import pagerank_incremental
+from repro.core.traversal import bfs, bfs_incremental
+from repro.core.updates import (
+    apply_edge_batch,
+    merge_batch_coo,
+    random_edge_batch,
+    rebuild_slack_csr,
+    touched_vertices,
+)
+from repro.serving.graph_frontend import FakeClock, GraphFrontend, GraphQuery
+from repro.roofline import UpdateRoofline
+
+BATCH_GRID = (64, 256, 1024, 4096)
+
+
+def _time_host(fn, reps: int) -> float:
+    """Median wall-clock of a host-driven (non-jittable) call chain."""
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run() -> Rows:
+    rows = Rows()
+    smoke = graph_scale() == "smoke"
+    reps = 2 if smoke else 5
+
+    for name, coo in graph_suite(graph_scale()).items():
+        n, m = coo.num_nodes, coo.num_edges
+        ex = PBExecutor()
+        g0 = build_slack_csr(coo)
+
+        # -- update rate at a mid batch (insert-heavy mix) ----------------
+        b_rate = min(1024, m // 2)
+        batch = random_edge_batch(coo, 3 * b_rate // 4, b_rate // 4, seed=1)
+        sink: list = []
+        ex.add_decision_sink(sink)
+        t_batch = _time_host(
+            lambda: apply_edge_batch(g0, batch, executor=ex), reps
+        )
+        ex.remove_decision_sink(sink)
+        upd = [d for d in sink if d.get("kind") == "update"]
+        method = upd[-1]["method"] if upd else "?"
+        rf = UpdateRoofline(
+            num_tuples=m, num_indices=n, batch_size=batch.num_updates, method="fused"
+        )
+        rows.add(
+            f"fig10/update_rate/{name}",
+            t_batch * 1e6,
+            f"batch={batch.num_updates} rate={batch.num_updates / t_batch:.3g}_edges/s "
+            f"update_method={method} update_decisions={len(upd)} "
+            f"modeled_bytes incremental={rf.incremental_bytes:.3g} "
+            f"rebuild={rf.rebuild_bytes:.3g} "
+            f"ceiling={rf.speedup_ceiling:.2f}x",
+        )
+
+        # -- incremental-vs-rebuild crossover over the batch grid ---------
+        t_rebuild = _time_host(
+            lambda: rebuild_slack_csr(g0, executor=ex, headroom=0.25,
+                                      min_slack=4),
+            reps,
+        )
+        measured_star = None
+        parts = []
+        for b in BATCH_GRID:
+            if b > m:
+                parts.append(f"b{b}=skip")
+                continue
+            bb = random_edge_batch(coo, 3 * b // 4, b - 3 * b // 4, seed=b)
+            # rebuild_slack_frac=0 keeps the measured arm purely the
+            # delta-merge: the rebuild arm is timed separately above
+            t_inc = _time_host(
+                lambda: apply_edge_batch(
+                    g0, bb, executor=ex, rebuild_slack_frac=0.0
+                ),
+                reps,
+            )
+            parts.append(f"b{b}={t_inc * 1e6:.0f}us")
+            if measured_star is None and t_inc > t_rebuild:
+                measured_star = b
+        model_star = rf.crossover_batch(BATCH_GRID)
+        rows.add(
+            f"fig10/crossover/{name}",
+            t_rebuild * 1e6,
+            f"rebuild={t_rebuild * 1e6:.0f}us incremental[{' '.join(parts)}] "
+            f"measured_crossover_batch={measured_star} "
+            f"modeled_crossover_batch={model_star} "
+            f"(modeled at this n,m; None = incremental wins whole grid)",
+        )
+
+        # -- incremental kernel maintenance after an insert-only batch ----
+        b_ins = random_edge_batch(coo, min(256, m // 4), 0, seed=7)
+        res = apply_edge_batch(g0, b_ins, executor=ex)
+        csr_new = res.graph.to_csr()
+        touched, _ = touched_vertices(b_ins)
+        prev = bfs(g0.to_csr(), 0, executor=ex, with_parents=False)
+        t_bfs_inc = _time_host(
+            lambda: bfs_incremental(
+                csr_new, 0, prev.dist, touched, executor=ex
+            ),
+            reps,
+        )
+        t_bfs_full = _time_host(
+            lambda: bfs(csr_new, 0, executor=ex, with_parents=False), reps
+        )
+        inc_res, _ = bfs_incremental(
+            csr_new, 0, prev.dist, touched, executor=ex
+        )
+        coo_new = merge_batch_coo(coo, b_ins)
+        cold = pagerank_incremental(coo, None, tol=1e-5)
+        t_pr_warm = _time_host(
+            lambda: pagerank_incremental(coo_new, cold.ranks, tol=1e-5), reps
+        )
+        t_pr_cold = _time_host(
+            lambda: pagerank_incremental(coo_new, None, tol=1e-5), reps
+        )
+        warm = pagerank_incremental(coo_new, cold.ranks, tol=1e-5)
+        scratch = pagerank_incremental(coo_new, None, tol=1e-5)
+        prev_cc = connected_components_fused(coo)
+        cc_inc, _ = connected_components_incremental(coo_new, prev_cc.labels)
+        cc_full = connected_components_fused(coo_new)
+        rows.add(
+            f"fig10/incremental/{name}",
+            t_bfs_inc * 1e6,
+            f"bfs inc={t_bfs_inc * 1e6:.0f}us({inc_res.levels}r) "
+            f"full={t_bfs_full * 1e6:.0f}us | "
+            f"pagerank warm={t_pr_warm * 1e6:.0f}us({warm.iters}it) "
+            f"cold={t_pr_cold * 1e6:.0f}us({scratch.iters}it) | "
+            f"cc warm_iters={int(cc_inc.iters)} cold_iters={int(cc_full.iters)}",
+        )
+
+        # -- serving: update tick + memo/fresh pagerank ticks -------------
+        fe = GraphFrontend(executor=ex, max_batch=4, clock=FakeClock())
+        fe.register_graph(name, coo, seed=2)
+        fe.submit(GraphQuery(tenant="t0", graph=name, kind="pagerank"))
+        fe.run_until_drained()  # cold compute at epoch 0
+        fe.submit(GraphQuery(tenant="t0", graph=name, kind="pagerank"))
+        t_memo = _time_host(fe.run_until_drained, 1)
+        ub = random_edge_batch(coo, 128, 32, seed=3)
+        fe.submit(GraphQuery(tenant="t0", graph=name, kind="update", batch=ub))
+        t_update = _time_host(fe.run_until_drained, 1)
+        epoch = fe._graphs[name].epoch
+        fe.submit(GraphQuery(tenant="t0", graph=name, kind="pagerank"))
+        t_fresh = _time_host(fe.run_until_drained, 1)
+        rows.add(
+            f"fig10/serving/{name}",
+            t_update * 1e6,
+            f"update_tick={t_update * 1e6:.0f}us epoch={epoch} "
+            f"memo_tick={t_memo * 1e6:.0f}us "
+            f"post_update_fresh_tick={t_fresh * 1e6:.0f}us "
+            f"(epoch-keyed memo: mutation invalidates by construction)",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        os.environ["BENCH_SCALE"] = "small"
+        os.environ.setdefault("REPRO_BENCH_REPS", "1")
+        os.environ.setdefault("REPRO_BENCH_WARMUP", "1")
+    for r in run().emit():
+        print(r)

@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.fig7_scaling",
     "benchmarks.fig8_traversal",
     "benchmarks.fig9_spmm",
+    "benchmarks.fig10_updates",
     "benchmarks.serving_load",
     "benchmarks.moe_dispatch",
     "benchmarks.embed_grad",
@@ -42,6 +43,7 @@ SMOKE_MODULES = [
     "benchmarks.fig7_scaling",
     "benchmarks.fig8_traversal",
     "benchmarks.fig9_spmm",
+    "benchmarks.fig10_updates",
     "benchmarks.serving_load",
     "benchmarks.executor_autotune",
     "benchmarks.moe_dispatch",

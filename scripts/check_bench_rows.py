@@ -36,6 +36,7 @@ REQUIRED_PREFIXES = (
     "fig7/chunks/",
     "fig8/",
     "fig9/",
+    "fig10/",
     "serving/",
     "executor/",
     "moe/",

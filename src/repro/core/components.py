@@ -62,13 +62,13 @@ def connected_components(coo: COO, max_iters: int = 512) -> CCResult:
         "num_nodes", "max_iters", "method", "bin_range", "num_bins", "block", "plan",
     ),
 )
-def _cc_fused(src, dst, num_nodes, max_iters, method, bin_range, num_bins, block, plan):
+def _cc_fused(src, dst, labels0, num_nodes, max_iters, method, bin_range, num_bins, block, plan):
     """Label propagation where the per-iteration min-scatter runs as a
     fused bin-and-accumulate sweep (DESIGN.md §8): min is commutative
-    (and idempotent), so the binned edge stream never hits HBM."""
+    (and idempotent), so the binned edge stream never hits HBM.
+    ``labels0`` is the traced seed labeling — ``arange`` from scratch,
+    or the pre-batch labels for the incremental warm start (§15.3)."""
     from repro.core.executor import execute_reduce
-
-    labels0 = jnp.arange(num_nodes, dtype=jnp.int32)
 
     def reduce_min(key, val):
         return execute_reduce(
@@ -105,11 +105,51 @@ def connected_components_fused(
     d = ex.decide_or_forced(
         method, coo.num_nodes, coo.num_edges, jnp.int32, kind="reduce", op="min"
     )
+    labels0 = jnp.arange(coo.num_nodes, dtype=jnp.int32)
     labels, it = _cc_fused(
-        coo.src, coo.dst, coo.num_nodes, max_iters, d.method, d.bin_range,
-        d.num_bins, ex.block, d.plan,
+        coo.src, coo.dst, labels0, coo.num_nodes, max_iters, d.method,
+        d.bin_range, d.num_bins, ex.block, d.plan,
     )
     return CCResult(labels, it)
+
+
+def connected_components_incremental(
+    coo: COO,
+    labels_prev: jnp.ndarray,
+    *,
+    has_deletes: bool = False,
+    max_iters: int = 512,
+    method: str | None = None,
+):
+    """Connected components after an edge batch, warm-started from the
+    pre-batch labeling (DESIGN.md §15.3). Edge INSERTS only merge
+    components: every new component is a union of old ones, so the min
+    over its old labels IS the min vertex id of the new component —
+    seeding ``_cc_fused`` with ``labels_prev`` converges to exactly the
+    from-scratch labeling, in roughly the merge diameter instead of the
+    graph diameter. Deletions can split components (labels would need to
+    RISE, which min-propagation cannot express), so ``has_deletes=True``
+    falls back to a from-scratch ``connected_components_fused``.
+
+    ``coo`` is the POST-batch edge stream. Returns ``(CCResult, mode)``
+    with ``mode`` one of ``"incremental"``/``"full"``.
+    """
+    if has_deletes:
+        return (
+            connected_components_fused(coo, max_iters=max_iters, method=method),
+            "full",
+        )
+    from repro.core.executor import get_default_executor
+
+    ex = get_default_executor()
+    d = ex.decide_or_forced(
+        method, coo.num_nodes, coo.num_edges, jnp.int32, kind="reduce", op="min"
+    )
+    labels, it = _cc_fused(
+        coo.src, coo.dst, jnp.asarray(labels_prev, jnp.int32), coo.num_nodes,
+        max_iters, d.method, d.bin_range, d.num_bins, ex.block, d.plan,
+    )
+    return CCResult(labels, it), "incremental"
 
 
 @functools.lru_cache(maxsize=32)

@@ -795,7 +795,9 @@ class PBExecutor:
         if self.use_pallas and flat_values:
             c.append("pallas")
         c.append("hierarchical")
-        if kind == "reduce":
+        if kind in ("reduce", "update"):
+            # update (delta-merge) streams are reductions over the same
+            # pipelines, so the fused single sweep competes there too
             c.append("fused")
         return tuple(c)
 
@@ -975,7 +977,13 @@ class PBExecutor:
         self._decision_sinks.append(sink)
 
     def remove_decision_sink(self, sink: list) -> None:
-        self._decision_sinks.remove(sink)
+        # identity, not equality: nested sinks receive the same entries
+        # and compare ==, so list.remove would detach the wrong one
+        for i, s in enumerate(self._decision_sinks):
+            if s is sink:
+                del self._decision_sinks[i]
+                return
+        raise ValueError("sink not registered")
 
     def decide_or_forced(
         self,
@@ -1035,9 +1043,11 @@ class PBExecutor:
             m = _FALLBACK_TABLE.get(tkey)
             if m is not None and m in self._candidates(flat_values, kind):
                 return self._finalize(m, num_indices, bin_range, "fallback-table")
-        if kind == "reduce":
+        if kind != "bin":
             # fused legality at the F-TILE the policy would pick, not at
-            # full F: tiling is exactly what keeps wide rows resident
+            # full F: tiling is exactly what keeps wide rows resident.
+            # kind="update" (delta-merge streams) shares the reduce
+            # economics — only the cache key namespace differs.
             isz = jnp.dtype(dtype).itemsize
             ft = self.choose_f_tile(feature_dim, num_indices, isz)
             analytic = self.analytic_reduce_method(
@@ -1164,7 +1174,7 @@ class PBExecutor:
         timings = {}
         for method in self._candidates(flat_values, kind):
             d = self._finalize(method, num_indices, bin_range, "probe")
-            if kind == "reduce":
+            if kind != "bin":
                 fn = _jitted_reduce(
                     num_indices, d.bin_range, d.num_bins, method, op, self.block,
                     self.interpret, d.plan, self.use_pallas, None, ftile, False,
@@ -1292,6 +1302,7 @@ class PBExecutor:
         method: Optional[str] = None,
         sorted_within: Optional[int] = None,
         in_bounds: bool = False,
+        kind: str = "reduce",
     ) -> jnp.ndarray:
         """Reduce one commutative stream to a dense (out_size, ...) array.
 
@@ -1308,12 +1319,26 @@ class PBExecutor:
         fused realization: ``decide`` keys on F, checks fused legality at
         the chosen F-tile, and stamps ``f_tile`` on the decision
         (DESIGN.md §14).
+
+        ``kind`` tags the decision namespace: "reduce" (default) or
+        "update" for graph-mutation delta-merge streams (DESIGN.md §15)
+        — same candidate set and pipelines, but update streams get their
+        own cache keys (their index distribution is batch-shaped, not
+        edge-shaped) and their own decision-log records, so
+        BENCH_smoke.json can attribute method choices to mutation
+        traffic. Forced-method update calls still log (source="caller"):
+        the mutation trail must be visible even when the caller pinned
+        the method.
         """
         if op not in REDUCE_OPS:
             raise ValueError(
                 f"reduce_stream only serves commutative reductions {REDUCE_OPS}; "
                 f"got op={op!r}. Non-commutative consumers need the stable "
                 "two-phase path: bin_stream() + an order-aware Bin-Read."
+            )
+        if kind not in ("reduce", "update"):
+            raise ValueError(
+                f"reduce_stream kind must be 'reduce' or 'update', got {kind!r}"
             )
         vshape = (
             pb.value_block_shape(values)
@@ -1330,7 +1355,7 @@ class PBExecutor:
                 vdtype,  # the VALUE dtype: it sizes the apply traffic
                 bin_range=bin_range,
                 flat_values=flat,
-                kind="reduce",
+                kind=kind,
                 op=op,
                 feature_dim=feat,
             )
@@ -1342,6 +1367,18 @@ class PBExecutor:
                     f_tile=self.choose_f_tile(
                         feat, out_size, jnp.dtype(vdtype).itemsize
                     ),
+                )
+            if kind == "update":
+                self._log_decision(
+                    {
+                        "kind": kind,
+                        "num_indices": out_size,
+                        "stream_len": int(indices.shape[0]),
+                        "method": d.method,
+                        "bin_range": d.bin_range,
+                        "source": d.source,
+                        "op": op,
+                    }
                 )
         if not flat and d.method != "fused":
             # the two-phase Bin-Read reduce handles row values too, but

@@ -6,13 +6,18 @@ We provide seeded synthetic analogues of each family so the benchmark
 suite reproduces the *structure* of the paper's tables without shipping
 multi-GB inputs.
 
-Representations (paper Fig. 1):
-  COO  — "Edgelist": parallel (src, dst) arrays, arbitrary edge order.
-  CSR  — offsets (n+1) + neighbor array sorted by src.
-  CSC  — CSR of the transposed graph (in-neighbors), used by pull kernels.
+Representations (paper Fig. 1, plus the mutation layout of DESIGN.md §15):
+  COO      — "Edgelist": parallel (src, dst) arrays, arbitrary edge order.
+  CSR      — offsets (n+1) + neighbor array sorted by src.
+  CSC      — CSR of the transposed graph (in-neighbors), used by pull kernels.
+  SlackCSR — CSR with per-vertex capacity slack: each vertex owns a slab
+             larger than its degree, so edge insertions append in place
+             and deletions tombstone in place (``core/updates.py``).
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -41,6 +46,124 @@ class CSR(NamedTuple):
     @property
     def num_edges(self) -> int:
         return int(self.neighs.shape[0])
+
+
+# Sentinel neighbor id marking a deleted (tombstoned) slot in a SlackCSR
+# slab. -1 is outside every valid vertex id, so a live-slot test is a
+# single compare and never collides with real edges.
+TOMBSTONE = -1
+
+
+class SlackCSR(NamedTuple):
+    """Capacity-slack CSR: the mutable layout (DESIGN.md §15).
+
+    Each vertex v owns the slab ``neighs[offsets[v] : offsets[v+1]]``
+    whose capacity exceeds its degree by a headroom factor. The first
+    ``counts[v]`` slots are OCCUPIED (in insertion order); an occupied
+    slot holding ``TOMBSTONE`` is a deleted edge awaiting compaction;
+    slots past ``counts[v]`` are free slack. Insertions append at
+    ``offsets[v] + counts[v]``; deletions tombstone in place — both are
+    O(batch) scatters, never a full rebuild. Tombstones consume slack
+    until ``to_csr()`` (or the rebuild path in ``core/updates.py``)
+    compacts them, which is what makes the slack-exhaustion rebuild
+    threshold meaningful.
+    """
+
+    offsets: jnp.ndarray  # (n+1,) slab starts: capacity prefix sum
+    neighs: jnp.ndarray  # (capacity,) slot values; TOMBSTONE = deleted
+    counts: jnp.ndarray  # (n,) occupied slots per slab (live + tombstoned)
+    num_nodes: int
+
+    @property
+    def capacity(self) -> int:
+        return int(self.neighs.shape[0])
+
+    @property
+    def num_occupied(self) -> int:
+        return int(np.asarray(self.counts).sum())
+
+    @property
+    def num_edges(self) -> int:
+        """Live (non-tombstoned) edges."""
+        return int(np.asarray(self.live_degrees()).sum())
+
+    @property
+    def slack_fraction(self) -> float:
+        """Free slots / capacity — the rebuild-threshold quantity."""
+        cap = self.capacity
+        if cap == 0:
+            return 1.0
+        return 1.0 - self.num_occupied / cap
+
+    def _slot_masks(self):
+        """(slot -> vertex, occupied mask, live mask) on host."""
+        off = np.asarray(self.offsets)
+        nei = np.asarray(self.neighs)
+        cnt = np.asarray(self.counts)
+        seg = np.repeat(np.arange(self.num_nodes), np.diff(off))
+        r = np.arange(nei.shape[0]) - off[seg]
+        occupied = r < cnt[seg]
+        return seg, occupied, occupied & (nei != TOMBSTONE)
+
+    def live_degrees(self) -> jnp.ndarray:
+        """(n,) live out-degree (occupied minus tombstoned)."""
+        seg, _, live = self._slot_masks()
+        return jnp.asarray(
+            np.bincount(seg[live], minlength=self.num_nodes).astype(np.int32)
+        )
+
+    @classmethod
+    def from_csr(
+        cls, csr: CSR, *, headroom: float = 0.25, min_slack: int = 4
+    ) -> "SlackCSR":
+        """Slack layout of ``csr``: per-vertex capacity = degree plus
+        ``max(min_slack, ceil(degree * headroom))``, slot order preserved
+        — so ``from_csr(c).to_csr()`` reproduces ``c`` exactly."""
+        if headroom < 0 or min_slack < 0:
+            raise ValueError(
+                f"headroom/min_slack must be >= 0, got {headroom}/{min_slack}"
+            )
+        off = np.asarray(csr.offsets).astype(np.int64)
+        nei = np.asarray(csr.neighs)
+        deg = np.diff(off)
+        cap = deg + np.maximum(min_slack, np.ceil(deg * headroom).astype(np.int64))
+        soff = np.concatenate([[0], np.cumsum(cap)])
+        slab = np.full(int(soff[-1]), TOMBSTONE, np.int32)
+        seg = np.repeat(np.arange(csr.num_nodes), cap)
+        r = np.arange(slab.shape[0]) - soff[seg]
+        occ = r < deg[seg]
+        slab[occ] = nei[(off[seg] + r)[occ]]
+        return cls(
+            offsets=jnp.asarray(soff.astype(np.int32)),
+            neighs=jnp.asarray(slab),
+            counts=jnp.asarray(deg.astype(np.int32)),
+            num_nodes=csr.num_nodes,
+        )
+
+    def to_csr(self) -> CSR:
+        """Compact to an exact CSR: drop tombstones and free slack,
+        preserving per-vertex slot order."""
+        nei = np.asarray(self.neighs)
+        seg, _, live = self._slot_masks()
+        deg = np.bincount(seg[live], minlength=self.num_nodes)
+        return CSR(
+            offsets=jnp.asarray(
+                np.concatenate([[0], np.cumsum(deg)]).astype(np.int32)
+            ),
+            neighs=jnp.asarray(nei[live].astype(np.int32)),
+            num_nodes=self.num_nodes,
+        )
+
+    def to_coo(self) -> COO:
+        """Live edges as an Edgelist (CSR slot order) — the rebuild
+        path's input to ``PreprocessPipeline``."""
+        nei = np.asarray(self.neighs)
+        seg, _, live = self._slot_masks()
+        return COO(
+            src=jnp.asarray(seg[live].astype(np.int32)),
+            dst=jnp.asarray(nei[live].astype(np.int32)),
+            num_nodes=self.num_nodes,
+        )
 
 
 def degrees_from_coo(coo: COO, *, by: str = "src") -> jnp.ndarray:
@@ -177,6 +300,12 @@ def _graph_cache_dir() -> str:
     return os.path.join(base, "graphs")
 
 
+# Cache dirs whose save failure was already reported: the warning fires
+# once per directory per process, so an unwritable REPRO_PB_CACHE_DIR in
+# CI is visible without spamming one warning per graph.
+_SAVE_WARNED: set = set()
+
+
 def cached_graph(key: str, maker) -> COO:
     """Load a generated graph from the npz cache, or generate and save.
 
@@ -184,9 +313,9 @@ def cached_graph(key: str, maker) -> COO:
     domain) and every entry embeds ``GRAPH_GEN_VERSION``, so a cache hit
     is bit-identical to regeneration by the CURRENT generators — an
     entry written by an older generator or npz layout misses and
-    regenerates. Both cache layers degrade silently: a corrupt file
-    regenerates, an unwritable cache dir skips persistence — the suite
-    never fails over caching.
+    regenerates. A corrupt file regenerates silently; an unwritable
+    cache dir skips persistence with a one-time warning naming the path
+    (a silent skip once presented as a mystery per-run slowdown).
     """
     import os
 
@@ -215,8 +344,17 @@ def cached_graph(key: str, maker) -> COO:
                 gen_version=np.int64(GRAPH_GEN_VERSION),
             )
         os.replace(tmp, path)
-    except OSError:
-        pass
+    except OSError as e:
+        d = _graph_cache_dir()
+        if d not in _SAVE_WARNED:
+            _SAVE_WARNED.add(d)
+            warnings.warn(
+                f"graph cache save failed under {d!r} ({e}); graphs will "
+                "regenerate every run (set REPRO_PB_CACHE_DIR to a "
+                "writable directory)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     return g
 
 
@@ -241,6 +379,17 @@ def graph_suite(scale: str = "bench") -> dict:
             "EURO": cached_graph(f"road_512_s4_{v}", lambda: gen_road(512, seed=4)),
             "HBUBL": cached_graph(f"bubbles_512_s5_{v}", lambda: gen_bubbles(512, seed=5)),
         }
+    return dict(_smoke_suite())
+
+
+@functools.lru_cache(maxsize=1)
+def _smoke_suite() -> dict:
+    """The 5 smoke graphs, generated once per process: the test suite
+    calls ``graph_suite("smoke")`` hundreds of times per pytest run and
+    the graphs are deterministic by seed, so regeneration was pure
+    waste. ``graph_suite`` hands out a fresh dict each call (callers may
+    pop/mutate the mapping); the COO entries are shared — they are
+    treated as immutable everywhere."""
     return {
         "DBP": gen_powerlaw(1 << 10, 4, seed=1),
         "KRON": gen_kron(10, 4, seed=2),

@@ -46,7 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import execute_binning, get_default_executor
-from repro.core.graph import COO, CSR, offsets_from_degrees, transpose_coo
+from repro.core.graph import (
+    COO, CSR, SlackCSR, offsets_from_degrees, transpose_coo,
+)
 from repro.core.plan import CobraPlan
 
 
@@ -206,6 +208,26 @@ def build_csr(
     raise ValueError(
         f"unknown build method: {method!r} (want one of {BUILD_METHODS})"
     )
+
+
+def build_slack_csr(
+    coo: COO,
+    headroom: float = 0.25,
+    min_slack: int = 4,
+    method: str = "auto",
+    bin_range: int | None = None,
+    block: int = 2048,
+    degrees: jnp.ndarray | None = None,
+) -> SlackCSR:
+    """EL->SlackCSR: the mutable layout ``core.updates`` edits in place
+    (DESIGN.md §15). The packed CSR comes out of the same PB build as
+    ``build_csr``; the re-slack is one gather into a slab with
+    ``headroom`` fractional (min ``min_slack`` absolute) spare capacity
+    per vertex."""
+    csr = build_csr(
+        coo, method=method, bin_range=bin_range, block=block, degrees=degrees
+    )
+    return SlackCSR.from_csr(csr, headroom=headroom, min_slack=min_slack)
 
 
 def build_csc(

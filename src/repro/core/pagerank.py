@@ -192,6 +192,73 @@ def pagerank_fused(coo: COO, iters: int = 10, method: str | None = None) -> PRRe
     return PRResult(r, iters)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "method", "bin_range", "num_bins", "block", "plan"),
+)
+def _pr_step(src, dst, ranks, outdeg, num_nodes, method, bin_range, num_bins, block, plan=None):
+    """One fused power-iteration step + its L1 movement (the warm-start
+    convergence signal ``pagerank_incremental`` polls per round)."""
+    from repro.core.executor import execute_reduce
+
+    n = num_nodes
+    contrib = ranks / outdeg
+    incoming = execute_reduce(
+        dst, jnp.take(contrib, src), out_size=n, op="add", method=method,
+        bin_range=bin_range, num_bins=num_bins, plan=plan, block=block,
+    )
+    new = (1.0 - DAMP) / n + DAMP * incoming
+    return new, jnp.sum(jnp.abs(new - ranks))
+
+
+def pagerank_incremental(
+    coo: COO,
+    ranks_prev: jnp.ndarray | None = None,
+    *,
+    tol: float = 1e-6,
+    max_iters: int = 200,
+    method: str | None = None,
+) -> PRResult:
+    """PageRank to tolerance by warm-started power iteration — the
+    incremental maintenance path after an edge batch (DESIGN.md §15.3).
+    The PageRank fixpoint of the NEW graph is unique, so the OLD ranks
+    are a valid starting point for ANY batch (inserts and deletes
+    alike); a small batch leaves the fixpoint nearby and the iteration
+    converges in a handful of rounds instead of the cold-start count.
+    ``ranks_prev=None`` is the cold start — the from-scratch side of the
+    incremental-vs-rebuild crossover (``benchmarks/fig10_updates.py``).
+
+    Iterates the same fused ``op="add"`` reduce as ``pagerank_fused``
+    until the L1 movement drops below ``tol``; ``PRResult.iters`` is the
+    number of rounds actually run.
+    """
+    if tol <= 0:
+        raise ValueError(f"tol must be > 0, got {tol}")
+    if max_iters < 1:
+        raise ValueError(f"max_iters must be >= 1, got {max_iters}")
+    ex = get_default_executor()
+    n = coo.num_nodes
+    d = ex.decide_or_forced(
+        method, n, coo.num_edges, jnp.float32, kind="reduce"
+    )
+    outdeg = jnp.maximum(jnp.bincount(coo.src, length=n), 1).astype(jnp.float32)
+    ranks = (
+        jnp.full((n,), 1.0 / n, jnp.float32)
+        if ranks_prev is None
+        else jnp.asarray(ranks_prev, jnp.float32)
+    )
+    it = 0
+    while it < max_iters:
+        ranks, delta = _pr_step(
+            coo.src, coo.dst, ranks, outdeg, n, d.method, d.bin_range,
+            d.num_bins, ex.block, d.plan,
+        )
+        it += 1
+        if float(delta) < tol:
+            break
+    return PRResult(ranks, it)
+
+
 @functools.lru_cache(maxsize=32)
 def _pr_sharded_fn(
     mesh, axis, num_nodes, n_dev, r, iters, method, block, capacity,

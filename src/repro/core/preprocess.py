@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from repro.core import neighbor_populate as npop
 from repro.core import traffic
 from repro.core.executor import PBExecutor, get_default_executor
-from repro.core.graph import COO, CSR
+from repro.core.graph import COO, CSR, SlackCSR
 from repro.core.reorder import REORDER_VARIANTS, relabel_coo, reorder_mapping
 
 
@@ -134,6 +134,9 @@ class PreprocessResult(NamedTuple):
     new_ids: jnp.ndarray
     degrees: jnp.ndarray  # in-pipeline degree histogram (pre-relabel ids)
     report: PreprocessReport
+    # the mutable layout (DESIGN.md §15), built as a timed pipeline stage
+    # when ``slack_headroom`` was set — None otherwise
+    slack: Optional[SlackCSR] = None
 
 
 def amortization_iters(
@@ -170,6 +173,13 @@ class PreprocessPipeline:
                   steady-state and the warmup's wall-clock lands in
                   ``StageReport.compile_seconds``. False times stages
                   cold — only for measuring compile cost itself.
+    slack_headroom: when set, a final "slack" stage re-slacks the built
+                  CSR into the mutable ``SlackCSR`` layout (DESIGN.md
+                  §15) with this per-vertex headroom fraction;
+                  ``PreprocessResult.slack`` carries it. The update
+                  rebuild path (``updates.rebuild_slack_csr``) rides
+                  this, so rebuild cost is stage-attributed like every
+                  other preprocessing cost.
     """
 
     def __init__(
@@ -184,6 +194,8 @@ class PreprocessPipeline:
         executor: Optional[PBExecutor] = None,
         seed: int = 0,
         warmup: bool = True,
+        slack_headroom: Optional[float] = None,
+        slack_min_slack: int = 4,
     ):
         if variant not in REORDER_VARIANTS:
             raise ValueError(
@@ -201,9 +213,15 @@ class PreprocessPipeline:
         self.bin_range = bin_range
         self.mesh = mesh
         self.axis_name = axis_name
+        if slack_headroom is not None and slack_headroom < 0:
+            raise ValueError(
+                f"slack_headroom must be >= 0, got {slack_headroom}"
+            )
         self.executor = executor
         self.seed = seed
         self.warmup = warmup
+        self.slack_headroom = slack_headroom
+        self.slack_min_slack = slack_min_slack
 
     # -- stage driver ------------------------------------------------------
 
@@ -306,6 +324,19 @@ class PreprocessPipeline:
                 lambda: npop.build_csc(relabeled, **build_kw),
             )
 
+        # 6. slack — the mutable re-slack of the built CSR (§15), only
+        # when asked: immutable consumers never pay the slab copy
+        slack = None
+        if self.slack_headroom is not None:
+            slack = self._run_stage(
+                stages, ex, "slack", stage_bytes("slack"),
+                lambda: SlackCSR.from_csr(
+                    csr,
+                    headroom=self.slack_headroom,
+                    min_slack=self.slack_min_slack,
+                ),
+            )
+
         report = PreprocessReport(
             variant=self.variant,
             build_method=self.build_method,
@@ -315,5 +346,6 @@ class PreprocessPipeline:
             stages=tuple(stages),
         )
         return PreprocessResult(
-            csr=csr, csc=csc, new_ids=new_ids, degrees=degrees, report=report
+            csr=csr, csc=csc, new_ids=new_ids, degrees=degrees, report=report,
+            slack=slack,
         )

@@ -457,7 +457,23 @@ def preproc_stage_bytes(
         return relabel_stage_bytes(num_tuples)
     if stage in ("build_csr", "build_csc"):
         return csr_build_stage_bytes(num_tuples, num_indices, build_method)
+    if stage == "slack":
+        return slack_build_stage_bytes(num_tuples, num_indices)
     raise ValueError(f"unknown preprocess stage: {stage!r}")
+
+
+def slack_build_stage_bytes(
+    num_tuples: int,
+    num_indices: int,
+    headroom: float = 0.25,
+    slot_bytes: int = 4,
+) -> float:
+    """Re-slack a built CSR into the mutable SlackCSR layout (DESIGN.md
+    §15): read the compact neighbor array once, write the
+    headroom-padded slab once, plus the offsets/counts sidecars."""
+    slab = num_tuples * (1.0 + headroom) * slot_bytes
+    sidecars = 2 * (num_indices + 1) * 4  # capacity offsets + counts
+    return num_tuples * slot_bytes + slab + sidecars
 
 
 # --- Frontier traversal counters (DESIGN.md §11) ---------------------------
@@ -594,6 +610,84 @@ def serving_query_bytes(
     return serving_tick_bytes(
         level_edges, num_indices, batch, method, index_bytes, value_bytes
     ) / max(1, batch)
+
+
+# --- Streaming update counters (DESIGN.md §15) -----------------------------
+#
+# apply_edge_batch is a PB workload over the BATCH, not the graph: two
+# kind="update" reduce streams of batch length land per-vertex deltas in
+# n-sized accumulators, deletes probe the touched vertices' slabs, and
+# inserts write their slack slots. The rebuild alternative re-runs the
+# identity preprocess pipeline over the whole edge array. The two curves
+# cross at a batch size the model predicts and fig10_updates.py measures.
+
+
+def update_batch_bytes(
+    batch_size: int,
+    num_indices: int,
+    touched_degree_sum: int | None = None,
+    method: str = "fused",
+    index_bytes: int = 4,
+    value_bytes: int = 4,
+) -> float:
+    """Sequential bytes of one delta-merge ``apply_edge_batch``: TWO
+    batch-length kind="update" reduce streams (net degree delta + insert
+    counts) into n-sized accumulators, the delete probes' slab reads
+    (``touched_degree_sum`` slots; defaults to ``batch_size`` — one
+    average-degree slab per tuple), the insert placements, and the
+    counts-array rewrite. Scales with the BATCH, not the graph — the
+    structural reason small batches beat rebuild."""
+    b = float(max(0, batch_size))
+    probes = float(
+        touched_degree_sum if touched_degree_sum is not None else batch_size
+    )
+    tuple_bytes = index_bytes + value_bytes
+    if method == "fused":
+        reduces = 2.0 * fused_stream_bytes(
+            int(b), num_indices, tuple_bytes, value_bytes
+        )
+    else:
+        reduces = 2.0 * pb_two_phase_stream_bytes(
+            int(b), num_indices, tuple_bytes, value_bytes
+        )
+    placement = b * (index_bytes + value_bytes)  # slot id + neighbor write
+    counts = 2.0 * (num_indices + 1) * 4  # counts read + rewrite
+    return reduces + probes * index_bytes + placement + counts
+
+
+def update_rebuild_bytes(
+    num_tuples: int,
+    num_indices: int,
+    build_method: str = "pb",
+    headroom: float = 0.25,
+) -> float:
+    """Sequential bytes of the full-rebuild alternative: the identity
+    preprocess pipeline over the WHOLE edge array (degree pass + EL->CSR
+    build) plus the re-slack into the mutable layout. Scales with m — a
+    floor no batch size changes."""
+    return (
+        degrees_stage_bytes(num_tuples, num_indices)
+        + csr_build_stage_bytes(num_tuples, num_indices, build_method)
+        + slack_build_stage_bytes(num_tuples, num_indices, headroom)
+    )
+
+
+def update_crossover_batch(
+    num_tuples: int,
+    num_indices: int,
+    batch_grid,
+    method: str = "fused",
+    build_method: str = "pb",
+) -> int | None:
+    """Smallest batch size in ``batch_grid`` where the delta-merge model
+    moves MORE bytes than one full rebuild — the modeled
+    incremental-vs-rebuild crossover fig10 reports next to the measured
+    one. Returns None when incremental wins everywhere on the grid."""
+    rebuild = update_rebuild_bytes(num_tuples, num_indices, build_method)
+    for b in sorted(int(x) for x in batch_grid):
+        if update_batch_bytes(b, num_indices, method=method) > rebuild:
+            return b
+    return None
 
 
 # --- Row-block SpMM counters (DESIGN.md §14) -------------------------------

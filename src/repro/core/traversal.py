@@ -431,6 +431,94 @@ def k_core(
     )
 
 
+def bfs_incremental(
+    csr: CSR,
+    source: int,
+    dist_prev: jnp.ndarray,
+    touched,
+    *,
+    has_deletes: bool = False,
+    executor: Optional[PBExecutor] = None,
+    method: str = "auto",
+    max_iters: Optional[int] = None,
+) -> Tuple[TraversalResult, str]:
+    """BFS after an edge batch, re-relaxing only the batch-touched
+    frontier (DESIGN.md §15.3). Edge INSERTS can only shorten BFS
+    distances, so the pre-batch ``dist_prev`` is a valid upper bound:
+    seed the frontier with the reached batch endpoints and run the same
+    per-level ``op="min"`` relaxation as ``bfs`` until it drains —
+    typically O(batch) work instead of O(m). Deletions can lengthen
+    distances, which monotone relaxation cannot express, so
+    ``has_deletes=True`` falls back to a from-scratch ``bfs``.
+
+    ``csr`` is the POST-batch graph; ``touched`` the batch's endpoint
+    vertices (``updates.touched_vertices``). Returns ``(result, mode)``
+    with ``mode`` one of ``"incremental"``/``"full"``; the incremental
+    result carries ``parent=None`` (levels/edges count only the
+    re-relaxation rounds).
+    """
+    _resolve(method)
+    ex = executor or get_default_executor()
+    n = csr.num_nodes
+    if not 0 <= source < n:
+        raise ValueError(f"source {source} outside [0, {n})")
+    if has_deletes:
+        return (
+            bfs(
+                csr, source, executor=ex, method=method,
+                max_iters=max_iters, with_parents=False,
+            ),
+            "full",
+        )
+    max_iters = n if max_iters is None else max_iters
+    offs_host = np.asarray(csr.offsets)
+    red = _LevelReducer(ex, method, None, None)
+
+    dist = jnp.asarray(dist_prev, jnp.int32)
+    dist_host = np.asarray(dist)
+    touched_np = np.unique(np.asarray(touched, np.int32))
+    # only reached endpoints can propagate a shorter level
+    frontier = touched_np[dist_host[touched_np] < _INT_MAX]
+    sizes = [int(frontier.size)]
+    edges = []
+    rounds = 0
+    while frontier.size and rounds < max_iters:
+        red.set_level(rounds)
+        total = int((offs_host[frontier + 1] - offs_host[frontier]).sum())
+        edges.append(total)
+        if total == 0:  # same trace semantics as the bfs zero-edge exit
+            rounds += 1
+            frontier = np.zeros(0, np.int32)
+            sizes.append(0)
+            break
+        ids, count = _pad_frontier(frontier)
+        be = bucket_len(total)
+        nbr, srcv, _, ok = _expand_frontier(
+            csr.offsets, csr.neighs, ids, count, be
+        )
+        # frontier vertices sit at heterogeneous levels after a batch,
+        # so relax dist[u] + 1 (unit-weight sssp) rather than level + 1
+        val = jnp.where(ok, dist[srcv] + 1, jnp.int32(_INT_MAX))
+        cand = red(nbr, val, out_size=n, op="min")
+        improved = cand < dist
+        dist = jnp.where(improved, cand, dist)
+        frontier = np.flatnonzero(np.asarray(improved)).astype(np.int32)
+        sizes.append(int(frontier.size))
+        rounds += 1
+    return (
+        TraversalResult(
+            dist=dist,
+            parent=None,
+            levels=rounds,
+            converged=frontier.size == 0,
+            frontier_sizes=tuple(sizes),
+            level_edges=tuple(edges),
+            decisions=tuple(red.decisions),
+        ),
+        "incremental",
+    )
+
+
 # ---------------------------------------------------------------------------
 # Micro-batched traversal: many source-vertex queries per reduce call.
 # ---------------------------------------------------------------------------

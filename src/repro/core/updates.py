@@ -1,0 +1,395 @@
+"""Streaming graph mutation as a PB workload (DESIGN.md §15).
+
+Production graphs mutate continuously; the pre-processing literature
+(PAPERS.md, arxiv 2309.07581) names dynamic/incremental layout
+maintenance the open frontier of the paper's claim that pre-processing
+is itself a PB workload. This module closes the loop: a batch of edge
+insertions/deletions is just another (idx, val) stream, and applying it
+to a ``SlackCSR`` is a binned delta-merge:
+
+  delta reduce — the batch's per-vertex degree deltas (+1 insert /
+      -1 delete) and insert counts are ONE commutative reduce each
+      through ``PBExecutor.reduce_stream(kind="update")`` — the same
+      plan-driven executor every other workload rides, under
+      update-specific cache keys and decision-log records.
+
+  slot placement — inserts land at ``offsets[v] + counts[v] + rank``,
+      where ``rank`` is the tuple's stable rank among same-vertex
+      inserts: a counting-permutation scatter (``pb.counting_permutation``
+      at bin_range=1) on small vertex domains, the stable argsort
+      realization of the same permutation on large ones (the counting
+      pass's one-hot scan is linear in the vertex fan-out, exactly the
+      §3 trade-off at its extreme).
+
+  deletions — tombstone ONE occupied slot per delete tuple (multiset
+      semantics, matching edge-set equality against a from-scratch
+      build). A delete with no live match is counted, not an error.
+
+  regrow — vertices whose slab would overflow get a fresh capacity
+      (need + headroom) via one vectorized re-layout gather; everyone
+      else's slab is copied untouched.
+
+  rebuild — when free slack falls below ``rebuild_slack_frac`` (slack
+      exhaustion: tombstones + appends eat headroom), the whole graph is
+      compacted and re-slacked through the existing
+      ``PreprocessPipeline`` (variant="identity", so vertex ids are
+      stable) — full-rebuild cost is the crossover ``roofline.
+      UpdateRoofline`` models and ``benchmarks/fig10_updates.py``
+      measures.
+
+Consumers: incremental re-relaxation kernels (``traversal.
+bfs_incremental``, ``pagerank.pagerank_incremental``, ``components.
+connected_components_incremental``) and the epoch-aware serving
+frontend (``serving/graph_frontend.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pb
+from repro.core.executor import PBExecutor, get_default_executor
+from repro.core.graph import COO, TOMBSTONE, SlackCSR
+
+# Vertex-domain ceiling for the counting-permutation slot placement: the
+# one-hot scan inside ``pb.counting_permutation`` is O(block * num_bins)
+# per step, so beyond this fan-out the stable-sort realization of the
+# SAME permutation is the right §3 compromise.
+_COUNTING_PLACEMENT_MAX_BINS = 4096
+
+
+class EdgeBatch(NamedTuple):
+    """One mutation batch: parallel endpoint arrays + an insert mask
+    (True = insert (src, dst), False = delete one live (src, dst))."""
+
+    src: jnp.ndarray  # (b,) int32
+    dst: jnp.ndarray  # (b,) int32
+    insert: jnp.ndarray  # (b,) bool
+
+    @property
+    def num_updates(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_inserts(self) -> int:
+        return int(np.asarray(self.insert).sum())
+
+    @property
+    def num_deletes(self) -> int:
+        return self.num_updates - self.num_inserts
+
+
+class UpdateResult(NamedTuple):
+    """One applied batch: the new layout + how the merge ran."""
+
+    graph: SlackCSR
+    rebuilt: bool  # slack exhaustion routed through PreprocessPipeline
+    regrown: int  # vertices whose slab was regrown in place
+    inserted: int
+    deleted: int  # deletes that tombstoned a live slot
+    missed_deletes: int  # deletes with no live matching edge (no-ops)
+    slack_fraction: float  # free slots / capacity AFTER the batch
+    decisions: Tuple[dict, ...]  # executor decisions (kind="update" + rebuild)
+    report: Optional[object]  # PreprocessReport when rebuilt, else None
+
+
+def make_batch(src, dst, insert) -> EdgeBatch:
+    return EdgeBatch(
+        src=jnp.asarray(np.asarray(src, np.int32)),
+        dst=jnp.asarray(np.asarray(dst, np.int32)),
+        insert=jnp.asarray(np.asarray(insert, bool)),
+    )
+
+
+def random_edge_batch(
+    coo: COO, num_inserts: int, num_deletes: int, *, seed: int = 0
+) -> EdgeBatch:
+    """Seeded benchmark/test batch: uniform-random insert endpoints plus
+    deletes sampled (without replacement) from the existing Edgelist, so
+    every delete matches a live edge."""
+    rng = np.random.default_rng(seed)
+    n, m = coo.num_nodes, coo.num_edges
+    num_deletes = min(num_deletes, m)
+    ins_src = rng.integers(0, n, num_inserts, dtype=np.int32)
+    ins_dst = rng.integers(0, n, num_inserts, dtype=np.int32)
+    pick = rng.choice(m, size=num_deletes, replace=False)
+    src = np.concatenate([ins_src, np.asarray(coo.src)[pick]])
+    dst = np.concatenate([ins_dst, np.asarray(coo.dst)[pick]])
+    insert = np.concatenate(
+        [np.ones(num_inserts, bool), np.zeros(num_deletes, bool)]
+    )
+    perm = rng.permutation(src.shape[0])  # interleave inserts and deletes
+    return make_batch(src[perm], dst[perm], insert[perm])
+
+
+def merge_batch_coo(coo: COO, batch: EdgeBatch) -> COO:
+    """The from-scratch oracle's input: ``coo (+) batch`` as a multiset —
+    inserts appended, each delete removing ONE matching occurrence (a
+    delete with no match is a no-op). Pure numpy; tests compare
+    ``apply_edge_batch(...).graph.to_csr()`` edge-set-equal to
+    ``build_csr(merge_batch_coo(coo, batch))``."""
+    n = coo.num_nodes
+    src = np.asarray(coo.src).astype(np.int64)
+    dst = np.asarray(coo.dst).astype(np.int64)
+    ins = np.asarray(batch.insert)
+    bs = np.asarray(batch.src).astype(np.int64)
+    bd = np.asarray(batch.dst).astype(np.int64)
+    key = src * n + dst
+    del_key = np.sort(bs[~ins] * n + bd[~ins])
+    order = np.argsort(key, kind="stable")
+    sk = key[order]
+    # rank of each delete among equal-key deletes -> the rank-th live
+    # occurrence of that edge gets removed (multiset difference)
+    drank = np.arange(del_key.size) - np.searchsorted(del_key, del_key, "left")
+    lo = np.searchsorted(sk, del_key, "left")
+    hi = np.searchsorted(sk, del_key, "right")
+    hit = lo + drank < hi
+    keep = np.ones(src.size, bool)
+    keep[order[(lo + drank)[hit]]] = False
+    return COO(
+        src=jnp.asarray(
+            np.concatenate([src[keep], bs[ins]]).astype(np.int32)
+        ),
+        dst=jnp.asarray(
+            np.concatenate([dst[keep], bd[ins]]).astype(np.int32)
+        ),
+        num_nodes=n,
+    )
+
+
+def touched_vertices(batch: EdgeBatch) -> Tuple[np.ndarray, bool]:
+    """(unique endpoint ids, batch-has-deletes) — the seed set the
+    incremental kernels re-relax from, and the monotonicity flag that
+    decides incremental-vs-recompute (DESIGN.md §15.3)."""
+    ids = np.unique(
+        np.concatenate([np.asarray(batch.src), np.asarray(batch.dst)])
+    ).astype(np.int32)
+    return ids, bool((~np.asarray(batch.insert)).any())
+
+
+def _insert_ranks(ins_src: np.ndarray, n: int, method: Optional[str]) -> np.ndarray:
+    """Stable rank of each insert among same-vertex inserts — the
+    per-vertex slot-placement permutation. The counting realization
+    (``pb.counting_permutation`` at bin_range=1: one bin per vertex)
+    when the fan-out affords the one-hot scan or the caller forces
+    "counting"; otherwise the stable-argsort realization of the
+    identical permutation."""
+    b = ins_src.shape[0]
+    if b == 0:
+        return np.zeros(0, np.int64)
+    use_counting = method == "counting" or (
+        method in (None, "auto") and n <= _COUNTING_PLACEMENT_MAX_BINS
+    )
+    if use_counting and n <= _COUNTING_PLACEMENT_MAX_BINS:
+        block = max(32, min(2048, (1 << 21) // max(1, n)))
+        dest, counts = pb.counting_permutation(
+            jnp.asarray(ins_src), n, block=block
+        )
+        starts = np.concatenate([[0], np.cumsum(np.asarray(counts))])
+        return np.asarray(dest).astype(np.int64) - starts[ins_src]
+    order = np.argsort(ins_src, kind="stable")
+    sorted_src = ins_src[order]
+    group_start = np.searchsorted(sorted_src, sorted_src, "left")
+    rank = np.empty(b, np.int64)
+    rank[order] = np.arange(b) - group_start
+    return rank
+
+
+def _tombstone_deletes(
+    off: np.ndarray,
+    nei: np.ndarray,
+    cnt: np.ndarray,
+    n: int,
+    del_src: np.ndarray,
+    del_dst: np.ndarray,
+) -> Tuple[int, int]:
+    """Tombstone one occupied live slot per delete tuple (vectorized
+    multiset match). Mutates ``nei`` in place; returns (hits, misses)."""
+    if del_src.size == 0:
+        return 0, 0
+    seg = np.repeat(np.arange(n), np.diff(off))
+    r = np.arange(nei.shape[0]) - off[seg]
+    live = (r < cnt[seg]) & (nei != TOMBSTONE)
+    slots = np.flatnonzero(live)
+    skey = seg[slots].astype(np.int64) * n + nei[slots]
+    sorder = np.argsort(skey, kind="stable")
+    slots_sorted = slots[sorder]
+    skey_sorted = skey[sorder]
+    dkey = np.sort(del_src.astype(np.int64) * n + del_dst)
+    drank = np.arange(dkey.size) - np.searchsorted(dkey, dkey, "left")
+    lo = np.searchsorted(skey_sorted, dkey, "left")
+    hi = np.searchsorted(skey_sorted, dkey, "right")
+    hit = lo + drank < hi
+    nei[slots_sorted[(lo + drank)[hit]]] = TOMBSTONE
+    return int(hit.sum()), int((~hit).sum())
+
+
+def _regrow(
+    off: np.ndarray,
+    nei: np.ndarray,
+    cnt: np.ndarray,
+    n: int,
+    need: np.ndarray,
+    headroom: float,
+    min_slack: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-vertex capacity regrow: slabs that would overflow get a fresh
+    capacity (need + headroom); every slab's occupied prefix is copied by
+    one gather into the new layout. Returns (new offsets, new neighs)."""
+    cap = np.diff(off)
+    grow = need > cap
+    new_cap = cap.copy()
+    new_cap[grow] = need[grow] + np.maximum(
+        min_slack, np.ceil(need[grow] * headroom).astype(cap.dtype)
+    )
+    new_off = np.concatenate([[0], np.cumsum(new_cap)])
+    new_nei = np.full(int(new_off[-1]), TOMBSTONE, nei.dtype)
+    seg = np.repeat(np.arange(n), new_cap)
+    r = np.arange(new_nei.shape[0]) - new_off[seg]
+    occ = r < cnt[seg]
+    new_nei[occ] = nei[(off[seg] + r)[occ]]
+    return new_off, new_nei
+
+
+def apply_edge_batch(
+    g: SlackCSR,
+    batch: EdgeBatch,
+    *,
+    executor: Optional[PBExecutor] = None,
+    method: Optional[str] = None,
+    headroom: float = 0.25,
+    min_slack: int = 4,
+    rebuild_slack_frac: float = 0.05,
+    allow_rebuild: bool = True,
+) -> UpdateResult:
+    """Apply one insertion/deletion batch to a ``SlackCSR`` as a binned
+    delta-merge PB stream (DESIGN.md §15).
+
+    Per-vertex degree deltas and insert counts each run as ONE
+    commutative reduce through ``PBExecutor.reduce_stream(kind=
+    "update")`` (``method`` forwards: None/"auto" consults the decided
+    plan, "sort"/"counting"/"fused" force a path — all exact). Slot
+    placement is the counting-permutation scatter; overflowing slabs
+    regrow in place; when free slack (after the batch) drops below
+    ``rebuild_slack_frac``, the graph is compacted and re-slacked
+    through ``PreprocessPipeline(variant="identity")`` — the full
+    rebuild whose cost the fig10 crossover is measured against.
+    ``allow_rebuild=False`` pins the incremental path (benchmarks
+    measuring the crossover need both arms separately).
+    """
+    ex = executor or get_default_executor()
+    n = g.num_nodes
+    src = np.asarray(batch.src)
+    dst = np.asarray(batch.dst)
+    ins = np.asarray(batch.insert)
+    b = src.shape[0]
+    if b and not (
+        (src >= 0).all() and (src < n).all() and (dst >= 0).all() and (dst < n).all()
+    ):
+        raise ValueError(f"batch endpoints outside [0, {n})")
+
+    sink: list = []
+    ex.add_decision_sink(sink)
+    try:
+        if b:
+            # the delta-merge reduce pair: net degree delta + insert
+            # counts, both over the batch's src-keyed stream (the
+            # kind="update" decision namespace)
+            delta = ex.reduce_stream(
+                batch.src,
+                jnp.where(batch.insert, 1, -1).astype(jnp.int32),
+                out_size=n,
+                op="add",
+                method=method,
+                kind="update",
+                in_bounds=True,
+            )
+            ins_counts = ex.reduce_stream(
+                batch.src,
+                batch.insert.astype(jnp.int32),
+                out_size=n,
+                op="add",
+                method=method,
+                kind="update",
+                in_bounds=True,
+            )
+            ins_counts_np = np.asarray(ins_counts).astype(np.int64)
+            del delta  # the net delta feeds traffic models; counts drive layout
+        else:
+            ins_counts_np = np.zeros(n, np.int64)
+    finally:
+        ex.remove_decision_sink(sink)
+
+    off = np.asarray(g.offsets).astype(np.int64)
+    nei = np.asarray(g.neighs).copy()
+    cnt = np.asarray(g.counts).astype(np.int64).copy()
+
+    deleted, missed = _tombstone_deletes(
+        off, nei, cnt, n, src[~ins], dst[~ins]
+    )
+
+    regrown = 0
+    need = cnt + ins_counts_np
+    if (need > np.diff(off)).any():
+        regrown = int((need > np.diff(off)).sum())
+        off, nei = _regrow(off, nei, cnt, n, need, headroom, min_slack)
+
+    ins_src = src[ins]
+    if ins_src.size:
+        rank = _insert_ranks(ins_src, n, method)
+        slot = off[ins_src] + cnt[ins_src] + rank
+        nei[slot] = dst[ins]
+        cnt += ins_counts_np
+
+    out = SlackCSR(
+        offsets=jnp.asarray(off.astype(np.int32)),
+        neighs=jnp.asarray(nei),
+        counts=jnp.asarray(cnt.astype(np.int32)),
+        num_nodes=n,
+    )
+    rebuilt = False
+    report = None
+    if allow_rebuild and out.slack_fraction < rebuild_slack_frac:
+        out, report = rebuild_slack_csr(
+            out, executor=ex, headroom=headroom, min_slack=min_slack
+        )
+        rebuilt = True
+        sink.extend(report.decisions())
+    return UpdateResult(
+        graph=out,
+        rebuilt=rebuilt,
+        regrown=regrown,
+        inserted=int(ins_src.size),
+        deleted=deleted,
+        missed_deletes=missed,
+        slack_fraction=out.slack_fraction,
+        decisions=tuple(sink),
+        report=report,
+    )
+
+
+def rebuild_slack_csr(
+    g: SlackCSR,
+    *,
+    executor: Optional[PBExecutor] = None,
+    headroom: float = 0.25,
+    min_slack: int = 4,
+):
+    """Full rebuild: compact the live edges and re-run the PB build
+    through ``PreprocessPipeline`` (variant="identity" — vertex ids are
+    serving-visible and must survive), then re-slack with fresh
+    headroom. Returns (SlackCSR, PreprocessReport)."""
+    from repro.core.preprocess import PreprocessPipeline
+
+    pipe = PreprocessPipeline(
+        variant="identity",
+        with_csc=False,
+        executor=executor,
+        warmup=False,  # one pass: rebuild cost is what fig10 measures
+        slack_headroom=headroom,
+        slack_min_slack=min_slack,
+    )
+    res = pipe.run(g.to_coo())
+    return res.slack, res.report

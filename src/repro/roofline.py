@@ -546,6 +546,67 @@ class ServingRoofline:
 
 
 @dataclass(frozen=True)
+class UpdateRoofline:
+    """HBM-roofline view of streaming graph mutation (DESIGN.md §15):
+    the modeled sequential bytes of one delta-merge ``apply_edge_batch``
+    (two kind="update" reduce streams + slot edits — scales with the
+    BATCH) against one full rebuild through the identity preprocess
+    pipeline (degree pass + EL->CSR build + re-slack — scales with the
+    GRAPH). Their ratio bounds the incremental speedup at a batch size,
+    and ``crossover_batch`` is the modeled batch where rebuild starts
+    winning — the number fig10_updates.py reports next to the measured
+    crossover."""
+
+    num_tuples: int  # live edges in the graph (the rebuild's m)
+    num_indices: int
+    batch_size: int
+    method: str = "fused"
+    build_method: str = "pb"
+    hbm_bw: float = 819e9
+
+    @property
+    def incremental_bytes(self) -> float:
+        from repro.core.traffic import update_batch_bytes
+
+        return update_batch_bytes(
+            self.batch_size, self.num_indices, method=self.method
+        )
+
+    @property
+    def rebuild_bytes(self) -> float:
+        from repro.core.traffic import update_rebuild_bytes
+
+        return update_rebuild_bytes(
+            self.num_tuples, self.num_indices, self.build_method
+        )
+
+    @property
+    def t_incremental(self) -> float:
+        return self.incremental_bytes / self.hbm_bw
+
+    @property
+    def t_rebuild(self) -> float:
+        return self.rebuild_bytes / self.hbm_bw
+
+    @property
+    def speedup_ceiling(self) -> float:
+        """Bandwidth-bound speedup of delta-merge over rebuild at this
+        batch size (< 1 past the crossover)."""
+        return self.rebuild_bytes / max(self.incremental_bytes, 1e-30)
+
+    def crossover_batch(self, batch_grid):
+        """Modeled crossover: smallest batch in ``batch_grid`` where one
+        rebuild moves fewer bytes than the delta-merge (None if
+        incremental wins on the whole grid)."""
+        from repro.core.traffic import update_crossover_batch
+
+        return update_crossover_batch(
+            self.num_tuples, self.num_indices, batch_grid, self.method,
+            self.build_method,
+        )
+
+
+@dataclass(frozen=True)
 class PreprocessRoofline:
     """HBM-roofline view of the preprocessing pipeline (DESIGN.md §10):
     the modeled sequential bytes of every stage (degrees + mapping +

@@ -34,6 +34,16 @@ module is the frontend that turns the stack into a query engine:
       invariant test wraps ``cache.put``); compile warmth is best-effort
       via probe queries at the serving lane widths.
 
+  mutation   — "update" queries carry an ``EdgeBatch`` (original ids)
+      and ride the SAME per-tenant tick loop as reads: each applied
+      batch is one kind="update" PB stream (``core.updates``) into the
+      graph's ``SlackCSR``, bumps the graph's **epoch**, refreshes the
+      packed CSR the read kernels consume, and redraws sssp weights
+      deterministically from (seed, epoch). Memoized global answers are
+      keyed by (graph, epoch, kind, param) — a mutation invalidates
+      them by construction, never by a flush the tests could miss
+      (DESIGN.md §15.4).
+
   clock      — all timing goes through an injected ``Clock``
       (``perf_counter``-backed; monotonic, unlike the ``time.time()``
       the old Engine used). ``FakeClock`` + ``poisson_trace`` +
@@ -57,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import PBExecutor, get_default_executor
-from repro.core.graph import COO
+from repro.core.graph import COO, SlackCSR
 from repro.core.preprocess import PreprocessPipeline, PreprocessReport
 from repro.core.traversal import (
     BATCHED_TRAVERSAL_METHODS,
@@ -67,12 +77,16 @@ from repro.core.traversal import (
     personalized_pagerank,
     sssp_batched,
 )
+from repro.core.updates import EdgeBatch, apply_edge_batch, make_batch
 
-QUERY_KINDS = ("bfs", "sssp", "ppr", "pagerank", "kcore")
+QUERY_KINDS = ("bfs", "sssp", "ppr", "pagerank", "kcore", "update")
 
 # Kinds whose answer depends on a source vertex: these coalesce into
 # batched lanes. "pagerank"/"kcore" are graph-global — one computation
-# serves every query of the group (memoized per (graph, kind, param)).
+# serves every query of the group (memoized per (graph, epoch, kind,
+# param) — the epoch key makes a mutation invalidate by construction).
+# "update" queries carry an ``EdgeBatch`` and mutate the graph's
+# ``SlackCSR`` through the same tick loop (DESIGN.md §15.4).
 _SOURCE_KINDS = ("bfs", "sssp", "ppr")
 
 
@@ -173,6 +187,7 @@ class GraphQuery:
     source: int = 0  # bfs / sssp / ppr
     iters: int = 10  # ppr / pagerank power iterations
     k: int = 2  # kcore threshold
+    batch: Optional[EdgeBatch] = None  # update (ORIGINAL ids)
     qid: int = -1  # assigned at submit
     t_submit: float = 0.0
     t_start: float = 0.0  # admission into a tick
@@ -190,13 +205,18 @@ class GraphQuery:
 
 @dataclasses.dataclass
 class RegisteredGraph:
-    """One preprocessed tenant-visible graph."""
+    """One preprocessed tenant-visible graph. Mutable on purpose:
+    "update" queries swap ``slack``/``csr``/``weights`` in place and
+    bump ``epoch`` — the version stamp every memo key carries."""
 
     name: str
     csr: "object"  # core.graph.CSR (reordered layout)
     new_ids: np.ndarray  # old id -> new id (PreprocessPipeline mapping)
     weights: jnp.ndarray  # per-CSR-edge sssp weights (relabeled order)
     report: PreprocessReport
+    slack: Optional[SlackCSR] = None  # the mutable layout updates edit
+    epoch: int = 0  # bumped once per applied edge batch
+    seed: int = 0  # weight redraw seed ((seed, epoch) per epoch > 0)
 
 
 @dataclasses.dataclass
@@ -288,6 +308,7 @@ class GraphFrontend:
         build_method: str = "auto",
         weights: Optional[jnp.ndarray] = None,
         seed: int = 0,
+        slack_headroom: float = 0.25,
     ) -> RegisteredGraph:
         """Preprocess ``coo`` (reorder + PB rebuild via
         ``PreprocessPipeline``) and admit it to the registry.
@@ -296,6 +317,13 @@ class GraphFrontend:
         deterministic uniform(0.1, 1.1) weights from ``seed``, so two
         frontends registering the same graph with the same seed serve
         bit-identical sssp answers (the coalescing tests rely on it).
+        After a mutation the edge count changes, so weights are REDRAWN
+        deterministically from ``(seed, epoch)`` — caller-supplied
+        weights only cover epoch 0.
+
+        ``slack_headroom`` sizes the mutable ``SlackCSR`` the pipeline
+        re-slacks alongside the packed CSR — the layout "update" queries
+        edit (DESIGN.md §15.4).
         """
         if name in self._graphs:
             raise ValueError(f"graph {name!r} already registered")
@@ -304,6 +332,7 @@ class GraphFrontend:
             build_method=build_method,
             with_csc=False,  # every serving kernel pushes on the CSR
             executor=self.ex,
+            slack_headroom=slack_headroom,
         )
         res = pipe.run(coo)
         m = res.csr.num_edges
@@ -323,6 +352,9 @@ class GraphFrontend:
             new_ids=np.asarray(res.new_ids),
             weights=w,
             report=res.report,
+            slack=res.slack,
+            epoch=0,
+            seed=seed,
         )
         self._graphs[name] = g
         return g
@@ -426,6 +458,19 @@ class GraphFrontend:
             raise ValueError(f"source {q.source} outside [0, {n}) for {q.graph!r}")
         if q.kind in ("ppr", "pagerank") and q.iters < 1:
             raise ValueError(f"iters must be >= 1, got {q.iters}")
+        if q.kind == "update":
+            if q.batch is None:
+                raise ValueError("update queries need an EdgeBatch in q.batch")
+            if self._graphs[q.graph].slack is None:
+                raise ValueError(
+                    f"graph {q.graph!r} was registered without a SlackCSR "
+                    f"(slack_headroom=None): it cannot serve updates"
+                )
+            s, d = np.asarray(q.batch.src), np.asarray(q.batch.dst)
+            if s.size and not (
+                ((s >= 0) & (s < n)).all() and ((d >= 0) & (d < n)).all()
+            ):
+                raise ValueError(f"batch endpoints outside [0, {n}) for {q.graph!r}")
         q.qid = self._seq
         self._seq += 1
         q.t_submit = float(at) if at is not None else self.clock.now()
@@ -444,7 +489,7 @@ class GraphFrontend:
             return (q.graph, q.kind, q.iters)
         if q.kind == "kcore":
             return (q.graph, q.kind, q.k)
-        return (q.graph, q.kind, None)
+        return (q.graph, q.kind, None)  # bfs / sssp / update
 
     def _admit(self) -> Tuple[List[GraphQuery], Optional[tuple]]:
         """Pick the tick's group and drain up to ``max_batch`` matching
@@ -534,6 +579,8 @@ class GraphFrontend:
         graph, kind, param = group
         g = self._graphs[graph]
         nid = g.new_ids
+        if kind == "update":
+            return self._execute_updates(g, queries)
         if kind in _SOURCE_KINDS:
             # original-id sources -> reordered layout; lanes padded to a
             # power of two (first source repeated; spare rows discarded)
@@ -564,8 +611,12 @@ class GraphFrontend:
                 # invert the relabeling: row is new-id-indexed
                 q.result = rows[i][nid]
             return {"lanes": int(B), "levels": int(levels), "edges": edges}
-        # graph-global kinds: one computation, memoized, shared
-        mkey = (graph, kind, param)
+        # graph-global kinds: one computation, memoized, shared. The key
+        # carries the graph EPOCH (even at epoch 0 — the no-mutation
+        # path pays the same key shape), so an applied edge batch makes
+        # every stale entry unreachable by construction; _execute_updates
+        # prunes the dead epochs' entries eagerly.
+        mkey = (graph, g.epoch, kind, param)
         cached = mkey in self._memo
         if not cached:
             if kind == "pagerank":
@@ -583,6 +634,57 @@ class GraphFrontend:
         for q in queries:
             q.result = self._memo[mkey]
         return {"lanes": 1, "levels": int(levels), "edges": int(edges), "memo": cached}
+
+    def _execute_updates(self, g: RegisteredGraph, queries: List[GraphQuery]) -> dict:
+        """Apply the tick's edge batches to ``g``'s SlackCSR — one
+        ``apply_edge_batch`` (a kind="update" PB stream) per query, in
+        qid order — then bump the epoch once per batch and refresh the
+        packed CSR the query kernels read. Memo entries of the dead
+        epochs are pruned; sssp weights are redrawn deterministically
+        from ``(seed, epoch)`` at the new edge count. Each query's
+        ``result`` is the 4-vector [epoch, inserted, deleted,
+        missed_deletes]."""
+        nid = g.new_ids
+        inserted = deleted = missed = rebuilds = regrows = 0
+        decisions = 0
+        for q in queries:
+            b = q.batch
+            # tenant ids -> reordered layout (same mapping the source
+            # kinds apply on the way in)
+            nb = make_batch(
+                nid[np.asarray(b.src)], nid[np.asarray(b.dst)],
+                np.asarray(b.insert),
+            )
+            res = apply_edge_batch(g.slack, nb, executor=self.ex)
+            g.slack = res.graph
+            g.epoch += 1
+            inserted += res.inserted
+            deleted += res.deleted
+            missed += res.missed_deletes
+            rebuilds += int(res.rebuilt)
+            regrows += res.regrown
+            decisions += len(res.decisions)
+            q.result = np.asarray(
+                [g.epoch, res.inserted, res.deleted, res.missed_deletes],
+                np.int64,
+            )
+        g.csr = g.slack.to_csr()
+        rng = np.random.default_rng((g.seed, g.epoch))
+        g.weights = jnp.asarray(
+            rng.random(g.csr.num_edges, dtype=np.float32) + 0.1
+        )
+        self._memo = {
+            k: v for k, v in self._memo.items()
+            if k[0] != g.name or k[1] == g.epoch
+        }
+        return {
+            "lanes": len(queries), "levels": 0,
+            "edges": int(inserted + deleted + missed),
+            "epoch": int(g.epoch), "inserted": int(inserted),
+            "deleted": int(deleted), "missed_deletes": int(missed),
+            "rebuilds": int(rebuilds), "regrown": int(regrows),
+            "update_decisions": int(decisions),
+        }
 
     # -- reporting ---------------------------------------------------------
 

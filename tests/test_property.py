@@ -233,6 +233,49 @@ def test_cobra_kernel_property(keys, cap):
 
 @SET
 @given(
+    edges=st.lists(
+        st.tuples(st.integers(0, 31), st.integers(0, 31)), min_size=1, max_size=120
+    ),
+    updates=st.lists(
+        st.tuples(st.integers(0, 31), st.integers(0, 31), st.booleans()),
+        min_size=0,
+        max_size=60,
+    ),
+    method=st.sampled_from(["sort", "counting", "fused"]),
+)
+def test_apply_edge_batch_equals_multiset_merge(edges, updates, method):
+    """Delta-merging ANY batch into a SlackCSR == building from scratch
+    on ``coo (+) batch`` as a multiset (DESIGN.md §15), under every
+    forced reduce method. Zero headroom + min_slack=1 keeps the regrow
+    path hot; deletes may miss (no-op) or hit duplicates (remove one
+    occurrence each). Deterministic twins live in
+    tests/test_updates.py::test_delta_merge_matches_from_scratch_build."""
+    from repro.core import (
+        apply_edge_batch,
+        build_slack_csr,
+        csr_equal_as_sets,
+        make_batch,
+        merge_batch_coo,
+    )
+
+    g = COO(
+        src=jnp.asarray([e[0] for e in edges], jnp.int32),
+        dst=jnp.asarray([e[1] for e in edges], jnp.int32),
+        num_nodes=32,
+    )
+    batch = make_batch(
+        [u[0] for u in updates], [u[1] for u in updates], [u[2] for u in updates]
+    )
+    slack = build_slack_csr(g, headroom=0.0, min_slack=1)
+    res = apply_edge_batch(slack, batch, method=method, rebuild_slack_frac=0.0)
+    want = build_csr_oracle(merge_batch_coo(g, batch))
+    assert csr_equal_as_sets(res.graph.to_csr(), want)
+    assert res.inserted == batch.num_inserts
+    assert res.deleted + res.missed_deletes == batch.num_deletes
+
+
+@SET
+@given(
     n_tok=st.integers(1, 40),
     top_k=st.sampled_from([1, 2]),
     seed=st.integers(0, 100),
