@@ -1,10 +1,13 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench bench-smoke docs-check verify
+.PHONY: test bench bench-smoke docs-check lint verify
 
 test:
 	$(PY) -m pytest -x -q
+
+lint:
+	$(PY) scripts/pb_lint.py
 
 bench:
 	$(PY) -m benchmarks.run

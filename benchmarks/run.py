@@ -100,14 +100,17 @@ def main() -> None:
     all_rows = []
     module_secs = {}
     for modname in modules:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = __import__(modname, fromlist=["run"])
             for row in mod.run().emit():
                 all_rows.append(row)
                 print(row, flush=True)
-            module_secs[modname] = round(time.time() - t0, 1)
-            print(f"# {modname} done in {time.time()-t0:.0f}s", file=sys.stderr)
+            module_secs[modname] = round(time.perf_counter() - t0, 1)
+            print(
+                f"# {modname} done in {time.perf_counter()-t0:.0f}s",
+                file=sys.stderr,
+            )
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             row = f"{modname},0.0,ERROR:{type(e).__name__}:{e}"

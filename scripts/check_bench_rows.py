@@ -86,6 +86,17 @@ def main() -> int:
         errors.append(
             f"required row prefix(es) missing from the fresh run: {absent}"
         )
+    # benches run with the cheap always-on contract subset active
+    # (repro.analysis.contracts); a row that recorded a violation means a
+    # measured configuration broke the stream/decision contract mid-run
+    tainted = [
+        r["name"] for r in cur.get("rows", []) if "contract_violations" in r
+    ]
+    if tainted:
+        errors.append(
+            f"row(s) carry contract_violations — the measured config "
+            f"broke the PB stream contract: {sorted(tainted)[:10]}"
+        )
     base = load_baseline(ref)
     if base is None:
         # no committed baseline yet (first run / shallow clone): only the

@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""PB repo linter CLI (DESIGN.md §16.1).
+
+Runs the AST rules in ``repro.analysis.rules`` over the repo (or the
+given paths) and reports findings not covered by the checked-in
+baseline. Exit status: 0 when clean (every finding baselined), 1 when
+new findings exist, 2 on usage errors.
+
+Imports only the stdlib plus ``repro.analysis.lint`` — never jax — so
+it runs anywhere in well under a second.
+
+Usage:
+  python scripts/pb_lint.py                       # lint default targets
+  python scripts/pb_lint.py src/repro/core        # lint a subtree
+  python scripts/pb_lint.py --format=json         # machine-readable
+  python scripts/pb_lint.py --select PB002,PB006  # subset of rules
+  python scripts/pb_lint.py --write-baseline      # grandfather findings
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis import lint  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join(_HERE, "pb_lint_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="pb_lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument(
+        "paths", nargs="*",
+        help="files/directories to lint (default: src/repro scripts benchmarks)",
+    )
+    ap.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="output format (default: text)",
+    )
+    ap.add_argument(
+        "--select", default=None, metavar="RULES",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--baseline", default=DEFAULT_BASELINE, metavar="FILE",
+        help="baseline file of grandfathered finding fingerprints",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the baseline: report every finding",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to the baseline file and exit 0",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    args = ap.parse_args(argv)
+
+    only = None
+    if args.select:
+        only = [r.strip() for r in args.select.split(",") if r.strip()]
+        known = {cls.id for cls in _all_rule_classes()}
+        bad = sorted(set(only) - known)
+        if bad:
+            print(f"pb_lint: unknown rule id(s): {', '.join(bad)}", file=sys.stderr)
+            return 2
+
+    if args.list_rules:
+        for cls in _all_rule_classes():
+            print(f"{cls.id}  {cls.summary}")
+        return 0
+
+    rules = lint.get_rules(only)
+    findings = lint.lint_paths(args.paths or None, root=_ROOT, rules=rules)
+
+    if args.write_baseline:
+        bl = lint.Baseline({f.fingerprint for f in findings})
+        bl.save(args.baseline)
+        print(
+            f"pb_lint: wrote {len(bl.fingerprints)} fingerprint(s) to "
+            f"{os.path.relpath(args.baseline, _ROOT)}"
+        )
+        return 0
+
+    if args.no_baseline:
+        new, stale = list(findings), []
+    else:
+        baseline = lint.Baseline.load(args.baseline)
+        new, stale = baseline.split(findings)
+
+    if args.format == "json":
+        print(
+            json.dumps(
+                {
+                    "findings": [f.as_dict() for f in new],
+                    "baselined": len(findings) - len(new),
+                    "stale_baseline": stale,
+                },
+                indent=1,
+            )
+        )
+    else:
+        for f in new:
+            print(f.render())
+        if stale:
+            print(
+                f"pb_lint: note: {len(stale)} stale baseline entr"
+                f"{'y' if len(stale) == 1 else 'ies'} (fixed findings still "
+                "grandfathered) — rerun --write-baseline to prune",
+                file=sys.stderr,
+            )
+        summary = (
+            f"pb_lint: {len(new)} new finding(s), "
+            f"{len(findings) - len(new)} baselined"
+        )
+        print(summary, file=sys.stderr)
+    return 1 if new else 0
+
+
+def _all_rule_classes():
+    from repro.analysis.rules import ALL_RULES
+
+    return ALL_RULES
+
+
+if __name__ == "__main__":
+    sys.exit(main())

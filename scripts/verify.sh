@@ -4,6 +4,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== pb-lint (repo invariants, DESIGN.md §16) =="
+python scripts/pb_lint.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -1,0 +1,29 @@
+"""Static analysis + runtime contracts for the PB repo (DESIGN.md §16).
+
+Two layers, one goal: the stream/decision/kernel invariants each prior
+PR paid for stay machine-checked instead of re-discovered by hand.
+
+  ``repro.analysis.lint``       — AST repo linter (stdlib ``ast``, no
+      deps): the PB001–PB008 rule catalog, pragma suppression, baseline
+      support. CLI: ``scripts/pb_lint.py``.
+  ``repro.analysis.contracts``  — runtime contract checker:
+      ``check_stream`` validates every reduce stream the executor runs
+      (index bounds, sortedness claims, bin-range/accumulator legality,
+      value-rank policy, cache-key completeness). Cheap subset always
+      on; ``REPRO_PB_CHECK=1`` turns on the full data-touching checks.
+
+This ``__init__`` stays import-light on purpose: the lint CLI must not
+pull jax (``contracts`` does, via ``repro.core.pb``), so ``contracts``
+is resolved lazily.
+"""
+from __future__ import annotations
+
+__all__ = ["lint", "contracts"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,275 @@
+"""AST-based repo linter engine (DESIGN.md §16).
+
+Every rule codifies one bug class this repo actually shipped (the
+CHANGES.md citations live on the rule classes in ``analysis/rules/``).
+The engine is deliberately small: parse each file once with stdlib
+``ast``, hand every registered rule a :class:`FileContext`, filter the
+findings through pragma suppression, and (in the CLI) through a
+checked-in baseline of grandfathered findings.
+
+Suppression pragmas
+-------------------
+  ``# pb-lint: disable=PB001`` (or ``=PB001,PB006``) on any line the
+      flagged node spans (or the line directly above it) suppresses
+      those rules there. Policy: every disable carries a one-line
+      justification in the same comment or the line above.
+  ``# sorted-ok: <why>`` / ``# in-bounds-ok: <why>`` / ``# donate-ok:
+      <why>`` are *attestations*: PB007/PB008 findings are not
+      suppressed but *satisfied* — the pragma is the reviewable claim
+      the rule demands.
+
+Baselines
+---------
+A baseline file (``scripts/pb_lint_baseline.json``) lists fingerprints
+of grandfathered findings. Fingerprints hash the rule + relative path +
+stripped source line (not the line *number*), so unrelated edits above a
+finding don't churn the baseline. The repo's checked-in baseline is
+empty: the first lint run's findings were all fixed or attested.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+# Attestation pragma kinds (PB007/PB008). The trailing ``:`` is part of
+# the pragma: an attestation without a reason is not an attestation.
+ATTEST_KINDS = ("sorted-ok", "in-bounds-ok", "donate-ok")
+
+_DISABLE_RE = re.compile(r"#\s*pb-lint:\s*disable=([A-Z0-9,\s]+)")
+_ATTEST_RE = re.compile(r"#\s*(" + "|".join(ATTEST_KINDS) + r"):\s*\S")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation."""
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        # line-number-free: survives edits elsewhere in the file
+        return f"{self.rule}:{self.path}:{self.snippet.strip()}"
+
+    def as_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "snippet": self.snippet.strip(),
+            "fingerprint": self.fingerprint,
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class FileContext:
+    """One parsed file plus its pragma maps — what every rule receives."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.source = source
+        self.lines: List[str] = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # line -> rules disabled there; line -> attestation kinds there
+        self.disabled: Dict[int, Set[str]] = {}
+        self.attests: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _DISABLE_RE.search(text)
+            if m:
+                self.disabled[i] = {
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                }
+            am = _ATTEST_RE.search(text)
+            if am:
+                self.attests.setdefault(i, set()).add(am.group(1))
+        # function spans for enclosing-function lookups (PB007/PB008)
+        self.functions: List[Tuple[int, int, str]] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.append(
+                    (node.lineno, node.end_lineno or node.lineno, node.name)
+                )
+
+    # -- pragma queries ----------------------------------------------------
+
+    def is_disabled(self, rule: str, node: ast.AST) -> bool:
+        lo = getattr(node, "lineno", 0)
+        hi = getattr(node, "end_lineno", lo) or lo
+        for line in range(max(1, lo - 1), hi + 1):
+            if rule in self.disabled.get(line, ()):
+                return True
+        return False
+
+    def is_attested(self, kind: str, node: ast.AST) -> bool:
+        """An attestation pragma adjacent to (any line of, or the line
+        above/below) the flagged node."""
+        lo = getattr(node, "lineno", 0)
+        hi = getattr(node, "end_lineno", lo) or lo
+        for line in range(max(1, lo - 1), hi + 2):
+            if kind in self.attests.get(line, ()):
+                return True
+        return False
+
+    def enclosing_function(self, node: ast.AST) -> Optional[str]:
+        """Name of the innermost function whose span contains ``node``."""
+        line = getattr(node, "lineno", 0)
+        best: Optional[Tuple[int, int, str]] = None
+        for lo, hi, name in self.functions:
+            if lo <= line <= hi and (best is None or lo > best[0]):
+                best = (lo, hi, name)
+        return best[2] if best else None
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        snippet = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        return Finding(rule, self.rel, line, col, message, snippet)
+
+
+class Rule:
+    """Base rule: subclasses set ``id``/``summary``/``bug`` and implement
+    ``check``. ``bug`` cites the shipped bug the rule encodes — the rule
+    catalog in DESIGN.md §16 is generated from these attributes."""
+
+    id: str = "PB000"
+    summary: str = ""
+    bug: str = ""  # the CHANGES.md incident this rule fossilizes
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Engine.
+# ---------------------------------------------------------------------------
+
+# Directories the default walk targets, relative to the repo root. tests/
+# are exempt by policy (they seed violations on purpose); everything a
+# user can run is covered.
+DEFAULT_TARGETS = ("src/repro", "scripts", "benchmarks")
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache"}
+
+
+def repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def iter_python_files(paths: Sequence[str], root: Optional[str] = None) -> Iterator[str]:
+    root = root or repo_root()
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full):
+            if full.endswith(".py"):
+                yield full
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def get_rules(only: Optional[Iterable[str]] = None) -> List[Rule]:
+    from repro.analysis.rules import ALL_RULES
+
+    rules = [cls() for cls in ALL_RULES]
+    if only is not None:
+        wanted = set(only)
+        rules = [r for r in rules if r.id in wanted]
+    return rules
+
+
+def lint_file(
+    path: str, root: Optional[str] = None, rules: Optional[List[Rule]] = None
+) -> List[Finding]:
+    root = root or repo_root()
+    rules = rules if rules is not None else get_rules()
+    rel = os.path.relpath(path, root)
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        ctx = FileContext(path, rel, source)
+    except SyntaxError as e:
+        return [
+            Finding(
+                "PB000", rel.replace(os.sep, "/"), e.lineno or 1, 0,
+                f"file does not parse: {e.msg}",
+            )
+        ]
+    out: List[Finding] = []
+    for rule in rules:
+        for f_ in rule.check(ctx):
+            # re-resolve the node-less finding path: rules emit via
+            # ctx.finding, which already filters nothing — pragma
+            # filtering happens here so every rule gets it for free
+            out.append(f_)
+    return [f_ for f_ in out if not _suppressed(ctx, f_)]
+
+
+def _suppressed(ctx: FileContext, f: Finding) -> bool:
+    for line in range(max(1, f.line - 1), f.line + 1):
+        if f.rule in ctx.disabled.get(line, ()):
+            return True
+    return False
+
+
+def lint_paths(
+    paths: Optional[Sequence[str]] = None,
+    root: Optional[str] = None,
+    rules: Optional[List[Rule]] = None,
+) -> List[Finding]:
+    root = root or repo_root()
+    rules = rules if rules is not None else get_rules()
+    findings: List[Finding] = []
+    for path in iter_python_files(paths or DEFAULT_TARGETS, root):
+        findings.extend(lint_file(path, root=root, rules=rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Baseline (grandfathered findings).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Baseline:
+    fingerprints: Set[str] = field(default_factory=set)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.isfile(path):
+            return cls()
+        with open(path) as f:
+            blob = json.load(f)
+        return cls(set(blob.get("findings", [])))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(
+                {"version": 1, "findings": sorted(self.fingerprints)}, f, indent=1
+            )
+            f.write("\n")
+
+    def split(
+        self, findings: Sequence[Finding]
+    ) -> Tuple[List[Finding], List[str]]:
+        """(new findings not in the baseline, stale baseline entries)."""
+        fresh = {f.fingerprint for f in findings}
+        new = [f for f in findings if f.fingerprint not in self.fingerprints]
+        stale = sorted(self.fingerprints - fresh)
+        return new, stale

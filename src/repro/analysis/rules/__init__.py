@@ -1,0 +1,30 @@
+"""The PB rule catalog. Each rule fossilizes one shipped bug class —
+see the ``bug`` attribute on every rule and DESIGN.md §16 for the full
+catalog with suppression policy."""
+from __future__ import annotations
+
+from repro.analysis.rules.calls import (
+    PB001HardcodedMethod,
+    PB003RawSegmentSum,
+    PB007UnattestedSortedClaim,
+    PB008UnguardedDonation,
+)
+from repro.analysis.rules.hygiene import (
+    PB004AssertBeforeEmptyGuard,
+    PB005EqualityRemoveOnSinkList,
+    PB006SilentBroadExcept,
+)
+from repro.analysis.rules.timing import PB002NonMonotonicTime
+
+ALL_RULES = (
+    PB001HardcodedMethod,
+    PB002NonMonotonicTime,
+    PB003RawSegmentSum,
+    PB004AssertBeforeEmptyGuard,
+    PB005EqualityRemoveOnSinkList,
+    PB006SilentBroadExcept,
+    PB007UnattestedSortedClaim,
+    PB008UnguardedDonation,
+)
+
+__all__ = ["ALL_RULES"] + [cls.__name__ for cls in ALL_RULES]

@@ -1,0 +1,245 @@
+"""Call-site rules: executor routing, compat shims, caller promises.
+
+These rules inspect ``ast.Call`` nodes: who is being called, with what
+constant keyword arguments, and whether the surrounding code visibly
+carries the guard/attestation the call's semantics require.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import FileContext, Finding, Rule
+
+
+def _call_name(node: ast.Call) -> str:
+    """Last name segment of the called function: ``ex.reduce_stream`` ->
+    ``reduce_stream``, ``reduce_stream`` -> ``reduce_stream``."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an attribute chain (``jax.ops.segment_sum``)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class PB001HardcodedMethod(Rule):
+    """No hardcoded ``method="..."`` at executor decision call sites."""
+
+    id = "PB001"
+    summary = (
+        "hardcoded method= at a reduce_stream/bin_stream/decide call site "
+        "outside the executor — route through decide() (fused-legality, "
+        "autotune, decision log all live there)"
+    )
+    bug = (
+        "PR 4: core/ call sites hardcoded method=\"fused\", bypassing the "
+        "fused_fits legality check decide() enforces"
+    )
+
+    # the decision-taking entry points (PBExecutor methods and their
+    # module-level sharded counterpart); execute_reduce/execute_binning
+    # are the *static traceable cores* — methods there are realized
+    # decisions, not choices, so they are exempt by design
+    CALLEES = {
+        "reduce_stream",
+        "reduce_streams",
+        "shard_reduce_stream",
+        "bin_stream",
+        "bin_streams",
+        "scatter_add",
+        "scatter_add_batched",
+        "decide_or_forced",
+    }
+    # "auto" defers to decide(); "unbinned" is the explicit no-PB
+    # baseline arm benchmarks/tests compare against
+    ALLOWED = {"auto", "unbinned"}
+    EXEMPT_SUFFIXES = ("core/executor.py",)
+    EXEMPT_PREFIXES = ("benchmarks/", "tests/")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.rel.endswith(self.EXEMPT_SUFFIXES) or ctx.rel.startswith(
+            self.EXEMPT_PREFIXES
+        ):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_name(node) not in self.CALLEES:
+                continue
+            for kw in node.keywords:
+                if kw.arg != "method":
+                    continue
+                v = kw.value
+                if (
+                    isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)
+                    and v.value not in self.ALLOWED
+                ):
+                    yield ctx.finding(
+                        self.id,
+                        kw.value,
+                        f'hardcoded method="{v.value}" at a '
+                        f"{_call_name(node)}() call site — pass method=None "
+                        "(or \"auto\") and let decide() pick under the "
+                        "legality checks, or justify with a pragma",
+                    )
+
+
+class PB003RawSegmentSum(Rule):
+    """``segment_sum`` only via ``repro/compat.py``."""
+
+    id = "PB003"
+    summary = (
+        "raw jax.ops/jax.lax segment_sum import or call outside "
+        "repro/compat.py — the alias moved across jax releases; use "
+        "compat.segment_sum"
+    )
+    bug = (
+        "PR 8 satellite: core/pagerank.py used jax.ops.segment_sum, an "
+        "alias newer jax removes outright (seed collection failure class)"
+    )
+
+    EXEMPT_SUFFIXES = ("repro/compat.py",)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.rel.endswith(self.EXEMPT_SUFFIXES):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod in ("jax.ops", "jax.lax") and any(
+                    a.name == "segment_sum" for a in node.names
+                ):
+                    yield ctx.finding(
+                        self.id,
+                        node,
+                        f"direct segment_sum import from {mod} — import "
+                        "repro.compat.segment_sum instead",
+                    )
+            elif isinstance(node, ast.Attribute) and node.attr == "segment_sum":
+                dotted = _dotted(node)
+                if dotted in (
+                    "jax.ops.segment_sum",
+                    "jax.lax.segment_sum",
+                    "ops.segment_sum",
+                    "lax.segment_sum",
+                ):
+                    yield ctx.finding(
+                        self.id,
+                        node,
+                        f"raw {dotted} — route through repro.compat."
+                        "segment_sum (one import site to update when the "
+                        "alias moves again)",
+                    )
+
+
+class PB007UnattestedSortedClaim(Rule):
+    """Sortedness / in-bounds promises to XLA need a visible attestation."""
+
+    id = "PB007"
+    summary = (
+        "indices_are_sorted=True or mode=\"promise_in_bounds\" without an "
+        "attestation: the enclosing function's name must carry the claim "
+        "or an adjacent # sorted-ok: / # in-bounds-ok: pragma must state "
+        "why it holds"
+    )
+    bug = (
+        "PR 2: pb.bin_read_scatter_add claimed indices_are_sorted=True on "
+        "a stream that was only sorted *within bins* — silently wrong "
+        "results on XLA versions that exploit the hint"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if (
+                        kw.arg == "indices_are_sorted"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True
+                    ):
+                        if not self._sorted_attested(ctx, kw.value):
+                            yield ctx.finding(
+                                self.id,
+                                kw.value,
+                                "indices_are_sorted=True without attestation "
+                                "— name the function *sorted* or add an "
+                                "adjacent `# sorted-ok: <why>` pragma "
+                                "stating where the order comes from",
+                            )
+            elif (
+                isinstance(node, ast.Constant)
+                # pb-lint: disable=PB007 — the rule's own pattern literal
+                and node.value == "promise_in_bounds"
+            ):
+                if not self._in_bounds_attested(ctx, node):
+                    yield ctx.finding(
+                        self.id,
+                        node,
+                        'mode="promise_in_bounds" without attestation — '
+                        "add an adjacent `# in-bounds-ok: <why>` pragma "
+                        "stating which construction bounds the indices",
+                    )
+
+    def _sorted_attested(self, ctx: FileContext, node: ast.AST) -> bool:
+        fn = ctx.enclosing_function(node) or ""
+        return "sorted" in fn or ctx.is_attested("sorted-ok", node)
+
+    def _in_bounds_attested(self, ctx: FileContext, node: ast.AST) -> bool:
+        fn = ctx.enclosing_function(node) or ""
+        return "in_bounds" in fn or ctx.is_attested("in-bounds-ok", node)
+
+
+class PB008UnguardedDonation(Rule):
+    """``donate_argnums`` only where rerun safety is visible."""
+
+    id = "PB008"
+    summary = (
+        "donate_argnums without a visible rerun-safety guard: either gate "
+        "the donation on a condition (an `x if guard else ()` expression) "
+        "or attest with an adjacent # donate-ok: pragma"
+    )
+    bug = (
+        "PR 7: padded exchange buffers were donated unconditionally, but "
+        "the capacity-overflow rerun still needed them — donated-buffer "
+        "reuse is a runtime error (or worse, garbage) on real backends"
+    )
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg != "donate_argnums":
+                    continue
+                v = kw.value
+                if isinstance(v, ast.Constant) and v.value == ():
+                    continue  # explicit no-donation
+                if isinstance(v, (ast.Tuple, ast.List)) and not v.elts:
+                    continue
+                # a conditional donation IS the visible guard: the
+                # `else ()` arm proves someone thought about the rerun
+                if isinstance(v, ast.IfExp):
+                    continue
+                if ctx.is_attested("donate-ok", node):
+                    continue
+                yield ctx.finding(
+                    self.id,
+                    kw.value,
+                    "unconditional donate_argnums — gate it on a rerun-"
+                    "safety condition (`(...) if safe else ()`) or attest "
+                    "with `# donate-ok: <why no rerun can need these "
+                    "buffers>`",
+                )

@@ -23,6 +23,7 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -123,7 +124,11 @@ class CheckpointManager:
                 if zlib.adler32(np.ascontiguousarray(arr).tobytes()) != meta["adler32"]:
                     raise IOError(f"checksum mismatch in {name} ({meta['path']})")
             return manifest, data
-        except Exception as e:
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            # the failure modes of a torn/corrupt checkpoint dir: missing
+            # files / checksum (OSError), bad json or npz payload
+            # (ValueError, BadZipFile), truncated manifest (KeyError).
+            # Anything else is a real bug — let it raise.
             print(f"[ckpt] step {step} unusable: {e}")
             return None
 

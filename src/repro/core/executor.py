@@ -217,10 +217,13 @@ def _fused_reduce_jnp(
 
             return compat.segment_sum(
                 values, indices, num_segments=out_size,
-                indices_are_sorted=True,
+                # sorted-ok: branch gated on `srt` (caller's sorted_within
+                indices_are_sorted=True,  # claim), checked by REPRO_PB_CHECK
             ).astype(values.dtype)
         upd = out0.at[indices]
         apply = {"add": upd.add, "min": upd.min, "max": upd.max}[op]
+        # the contract checker verifies the promise under REPRO_PB_CHECK:
+        # in-bounds-ok: gated on the caller's explicit in_bounds claim
         mode = "promise_in_bounds" if in_bounds else "drop"
         return apply(values, indices_are_sorted=srt, mode=mode)
     pad = nblocks * block - m
@@ -1127,6 +1130,10 @@ class PBExecutor:
                     jax.block_until_ready(run())
                     ts.append(time.perf_counter() - t0)
                 timings[str(k)] = min(ts) * 1e6
+            # a chunking arm can be unsupported on a backend; the sweep
+            # must try the rest, and the arm missing from `timings` is
+            # the recorded trace of the failure
+            # pb-lint: disable=PB006
             except Exception:
                 continue
         if not timings:
@@ -1191,10 +1198,50 @@ class PBExecutor:
                     jax.block_until_ready(fn(idx, val))
                     ts.append(time.perf_counter() - t0)
                 timings[method] = min(ts) * 1e6
-            except Exception:  # a method may be unsupported on a backend
+            # a method may be unsupported on a backend; the measurement
+            # sweep must continue, and the method's absence from
+            # `timings` is the recorded outcome of the failure
+            # pb-lint: disable=PB006
+            except Exception:
                 continue
         best = min(timings, key=timings.get) if timings else "sort"
         return {"method": best, "timings_us": timings}
+
+    # -- contracts (DESIGN.md §16.2) ---------------------------------------
+
+    def _check_contract(
+        self,
+        indices,
+        values,
+        num_nodes: int,
+        d: BinningDecision,
+        *,
+        op: str = "add",
+        sorted_within: Optional[int] = None,
+        in_bounds: bool = False,
+    ) -> None:
+        """Validate the stream against the decision before running it.
+
+        The cheap structural subset (binning geometry, value rank,
+        fused-accumulator legality, cache-key completeness) is always
+        on; ``REPRO_PB_CHECK=1`` adds the data-touching claims
+        (in-bounds promise, sortedness) — see
+        ``repro.analysis.contracts.check_stream``. Violations raise a
+        typed ``ContractError`` carrying ``d.describe()``. Pytree value
+        streams are checked index-side only (their leaves are binned
+        leafwise and carry no rank policy).
+        """
+        from repro.analysis import contracts
+
+        vals = (
+            values
+            if hasattr(values, "shape") and hasattr(values, "dtype")
+            else np.zeros((int(indices.shape[0]),), np.int32)
+        )
+        contracts.check_stream(
+            indices, vals, num_nodes, d, op=op,
+            sorted_within=sorted_within, in_bounds=in_bounds, hw=self.hw,
+        )
 
     # -- execution ---------------------------------------------------------
 
@@ -1385,6 +1432,10 @@ class PBExecutor:
             # pallas binning is 1-D-only; route those to sort
             if d.method == "pallas":
                 d = self._finalize("sort", out_size, bin_range, d.source)
+        self._check_contract(
+            indices, values, out_size, d, op=op,
+            sorted_within=sorted_within, in_bounds=in_bounds,
+        )
         fn = _jitted_reduce(
             out_size, d.bin_range, d.num_bins, d.method, op, self.block,
             self.interpret, d.plan, self.use_pallas, sorted_within,
@@ -1562,6 +1613,9 @@ class PBExecutor:
             d = self._finalize(method, r, bin_range, "caller")
         if not flat and d.method == "pallas":  # pallas binning is 1-D-only
             d = self._finalize("sort", r, bin_range, d.source)
+        # per-device contract: the decision's binning geometry must cover
+        # the owned index range r (the device-local domain, DESIGN.md §9)
+        self._check_contract(indices, values, r, d, op=op)
         k = pipeline_chunks
         if k is None:
             key = self._key(r, n_dev * cap, vdtype, bin_range, "reduce", op, mesh_shape)

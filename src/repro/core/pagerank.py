@@ -74,8 +74,9 @@ def _pr_pull(offsets_t, neighs_t, outdeg, num_nodes, num_edges, iters):
         contrib = ranks / outdeg
         gathered = jnp.take(contrib, neighs_t)  # in-neighbor contributions
         incoming = compat.segment_sum(
+            # sorted-ok: seg comes from segment_ids_from_offsets, which is
             gathered, seg, num_segments=n, indices_are_sorted=True
-        )
+        )  # non-decreasing by construction (CSR offsets are monotone)
         return (1.0 - DAMP) / n + DAMP * incoming
 
     return jax.lax.fori_loop(0, iters, body, ranks)

@@ -54,7 +54,9 @@ def pb_scatter_add(indices, updates, out_size: int, coalesce: bool = True):
         run_sum = csum - prev_total
         contrib = jnp.where(is_last[(...,) + (None,) * (upd_s.ndim - 1)], run_sum, 0.0)
         out = jnp.zeros((out_size,) + updates.shape[1:], dtype=jnp.float32)
+        # sorted-ok: idx_s = take(indices, argsort(indices, stable=True))
         out = out.at[idx_s].add(contrib, indices_are_sorted=True)
         return out.astype(updates.dtype)
     out = jnp.zeros((out_size,) + updates.shape[1:], dtype=updates.dtype)
+    # sorted-ok: idx_s is the stably argsorted index stream (above)
     return out.at[idx_s].add(upd_s, indices_are_sorted=True)

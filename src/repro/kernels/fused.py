@@ -286,12 +286,12 @@ def cobra_bin_accumulate_rows_pallas(
         raise ValueError(f"fused accumulate needs a commutative op, got {op!r}")
     if val.ndim != 2:
         raise ValueError(f"row-block accumulate wants (m, F) values, got {val.shape}")
-    assert cap >= block, "C-Buffer capacity must cover one block"
-    assert num_bins * bin_range >= num_indices, "accumulator must cover the domain"
     m, F = val.shape
     ident = reduce_identity(op, val.dtype)
     if m == 0 or F == 0:
         return jnp.full((num_indices, F), ident, val.dtype)
+    assert cap >= block, "C-Buffer capacity must cover one block"
+    assert num_bins * bin_range >= num_indices, "accumulator must cover the domain"
     ft = F if f_tile is None else int(f_tile)
     assert 1 <= ft <= F, f"f_tile {ft} out of range for F={F}"
     keys = (idx // bin_range).astype(jnp.int32)
@@ -363,12 +363,12 @@ def cobra_bin_accumulate_pallas(
     """
     if op not in _FUSED_OPS:
         raise ValueError(f"fused accumulate needs a commutative op, got {op!r}")
-    assert cap >= block, "C-Buffer capacity must cover one block"
-    assert num_bins * bin_range >= num_indices, "accumulator must cover the domain"
     m = idx.shape[0]
     ident = reduce_identity(op, val.dtype)
     if m == 0:
         return jnp.full((num_indices,), ident, val.dtype)
+    assert cap >= block, "C-Buffer capacity must cover one block"
+    assert num_bins * bin_range >= num_indices, "accumulator must cover the domain"
     keys = (idx // bin_range).astype(jnp.int32)
     pad = (-m) % block
     keys_p = jnp.pad(keys, (0, pad), constant_values=num_bins)

@@ -23,7 +23,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from typing import Any, Dict, Optional
 
@@ -38,6 +37,10 @@ from repro.launch.mesh import HW, make_production_mesh
 from repro.models import params as pp
 from repro.models import transformer as T
 from repro.models.config import ModelConfig, flops_per_token
+from repro.serving.graph_frontend import Clock
+
+# compile timings survive NTP wall-clock steps (the serving Clock idiom)
+_CLOCK = Clock()
 from repro.roofline import CellCost, Roofline, collective_bytes_from_hlo, extrapolate
 from repro.train import steps as steps_mod
 from repro.train.optimizer import OptConfig, OptState
@@ -133,6 +136,7 @@ def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, accum_steps: int = 1):
             opt_sds = abstract_opt_state(params_sds, axes, oc, mesh)
             batch_sds = abstract_batch(cfg, shape, mesh)
             step = steps_mod.make_train_step(cfg, oc, accum_steps=accum_steps)
+            # donate-ok: .lower() only — nothing executes, nothing reruns
             return jax.jit(step, donate_argnums=(0,)).lower(
                 steps_mod.TrainState(params_sds, opt_sds), batch_sds
             )
@@ -146,6 +150,7 @@ def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, accum_steps: int = 1):
             state_sds = abstract_cache(cfg, shape, mesh)
             tokens = _sds((shape.global_batch, 1), jnp.int32, mesh, ("batch", None))
             step = steps_mod.make_decode_step(cfg)
+            # donate-ok: .lower() only — nothing executes, nothing reruns
             return jax.jit(step, donate_argnums=(1,)).lower(params_sds, state_sds, tokens)
         raise ValueError(shape.kind)
 
@@ -218,7 +223,7 @@ def analyze_cell(
         "chips": chips,
         "ok": False,
     }
-    t0 = time.time()
+    t0 = _CLOCK.now()
     # exact per-device state bytes (params + opt + cache) from shardings
     with shd.use_mesh(mesh, rules=shd.rules_for_profile(cfg.sharding_profile)):
         params_sds, axes = abstract_params(cfg, mesh)
@@ -257,7 +262,7 @@ def analyze_cell(
         )
         if live < HW["hbm_bytes"] * 0.94:  # leave headroom for runtime
             break
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(_CLOCK.now() - t0, 1)
     rec["accum_steps"] = accum
     # The CPU backend float-normalizes bf16 (no native bf16 FMA): every
     # bf16 weight/carry stack gets a hoisted f32 (+layout) copy that a TPU
@@ -373,7 +378,7 @@ def main():
     for arch, shape in todo:
         for mp in meshes:
             tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
-            t0 = time.time()
+            t0 = _CLOCK.now()
             try:
                 rec = analyze_cell(
                     arch, shape, mp,
@@ -386,10 +391,10 @@ def main():
                     if rl
                     else ""
                 )
-                print(f"[OK] {tag} ({time.time()-t0:.0f}s) "
+                print(f"[OK] {tag} ({_CLOCK.now()-t0:.0f}s) "
                       f"mem={rec['memory_per_device']['live_bytes']/1e9:.2f}GB{extra}",
                       flush=True)
-            except Exception as e:
+            except Exception as e:  # PB006-clean: failure recorded below
                 rec = {
                     "arch": arch, "shape": shape,
                     "mesh": "2x16x16" if mp else "16x16",

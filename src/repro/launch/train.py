@@ -18,7 +18,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +31,7 @@ from repro.ft.resilience import Heartbeat, StragglerDetector
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import params as pp
 from repro.models import transformer as T
+from repro.serving.graph_frontend import Clock
 from repro.train import steps as steps_mod
 from repro.train.optimizer import init_opt_state
 from repro.train.steps import TrainState, default_opt_config
@@ -102,18 +102,21 @@ def main(argv=None):
             if restored is not None:
                 state, start_step = restored, at
                 print(f"[train] resumed from step {at}")
+        # resume goes through the checkpoint manager, never a dead state:
+        # donate-ok: the old state is unreferenced once jstep returns
         jstep = jax.jit(train_step, donate_argnums=(0,))
         hb = Heartbeat(timeout_s=600, on_timeout=lambda: print("[ft] WATCHDOG FIRED")).start()
         sd = StragglerDetector()
-        t_last = time.time()
+        clock = Clock()  # monotonic: step dt survives NTP wall-clock steps
+        t_last = clock.now()
         for step in range(start_step, args.steps):
             batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
             state, metrics = jstep(state, batch)
             hb.beat()
             if (step + 1) % args.log_every == 0 or step == start_step:
                 loss = float(metrics["loss"])
-                dt = time.time() - t_last
-                t_last = time.time()
+                dt = clock.now() - t_last
+                t_last = clock.now()
                 slow = sd.observe(f"host{jax.process_index()}", dt)
                 tok_s = shape.global_batch * shape.seq_len * args.log_every / max(dt, 1e-9)
                 print(f"[train] step={step+1} loss={loss:.4f} "

@@ -181,6 +181,10 @@ def hlo_bytes_accessed(fn, *args) -> float:
         compiled = jax.jit(fn).lower(*args).compile()
         return float(cost_analysis(compiled).get("bytes accessed", float("nan")))
     except Exception:
+        # broad by design (lower/compile raise backend-specific types) but
+        # not silent: NaN is the documented no-cost-analysis sentinel that
+        # callers render as "n/a" — PB006 does not flag value-returning
+        # handlers, only pass/continue bodies
         return float("nan")
 
 
